@@ -1,0 +1,56 @@
+"""Shared benchmark harness config.
+
+The canonical experiment geometry mirrors the paper's two setups (§6):
+
+* **2:1** — local:CXL capacity 2:1 (the production config); the fast
+  tier comfortably holds the hot set.
+* **1:4** — fast tier is 20% of memory (memory-expansion config); only
+  part of the hot set fits — the stress test.
+
+All numbers are normalized to the all-fast **ideal** baseline like the
+paper's Table 1.  ``slow_cost`` models the CXL latency multiple
+(Fig. 2: ~2-3×); ``MEM_STALL_FRAC`` is the memory-bound fraction of app
+runtime (calibrated once so that default-Linux's loss lands in the
+paper's observed 14-18% band for the 1:4 cache configs — every policy
+then uses the SAME constant, so cross-policy deltas are parameter-free).
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.core import TppConfig
+
+SLOW_COST = 3.0
+MEM_STALL_FRAC = 0.11
+STEPS = 260
+MEASURE_FROM = 180
+SEED = 1
+
+# sample_rate throttles NUMA-hint faults (kernel: ~256MB/s of sampled
+# address space; paper: 50KB/s-1.2MB/s promotion). demote/promote budgets
+# model continuous background migration within one interval.
+POLICY_CFG = TppConfig(demote_budget=512, promote_budget=256, sample_rate=0.1)
+
+# (fast_frames, slow_frames, total_pages): fast holds ~66% / ~20%.
+# Frame totals leave ~10% headroom over the live-page peak (the traces
+# carry short-lived churn above total_pages, §5.2's allocation bursts).
+GEOM = {
+    "2:1": (2176, 1088, 2950),
+    "1:4": (544, 2176, 2400),
+}
+
+POLICIES = ("linux", "tpp", "numa_balancing", "autotiering")
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+@contextmanager
+def timed():
+    t0 = time.time()
+    box = {}
+    yield box
+    box["s"] = time.time() - t0

@@ -1,0 +1,65 @@
+"""MoE expert tiering (DESIGN.md §2): TPP over expert parameter pages.
+
+The serving-side second application: zipf-routed experts, HBM bank
+sized below L×E, policies compared on HBM-hit fraction and modeled
+cost — phi3.5-moe (16e top-2) and deepseek-v2-lite (64e top-6)
+geometries.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import TppConfig
+from repro.serving.expert_tier import ExpertTierConfig, ExpertTierManager
+
+CASES = [
+    # (name, layers, experts, top_k, fast_capacity fraction)
+    ("phi3.5-moe", 8, 16, 2, 0.4),
+    ("deepseek-v2-lite", 8, 64, 6, 0.25),
+]
+
+
+def run(quick: bool = False) -> List[str]:
+    steps = 120 if quick else 300
+    out = []
+    for name, L, E, K, frac in CASES:
+        rng = np.random.default_rng(0)
+        weights = {"wi": rng.standard_normal((L, E, 8, 16)).astype(np.float32)}
+        for policy in ("linux", "autotiering", "tpp"):
+            mgr = ExpertTierManager(
+                ExpertTierConfig(
+                    n_layers=L, n_experts=E, fast_capacity=int(frac * L * E),
+                    policy=policy,
+                    tpp=TppConfig(demote_budget=16, promote_budget=16),
+                ),
+                weights, seed=1,
+            )
+            rr = np.random.default_rng(2)
+            t0 = time.time()
+            for step in range(steps):
+                hits = []
+                for l in range(L):
+                    ranks = np.minimum(rr.zipf(1.5, size=K), E) - 1
+                    hits += [(l, int(r)) for r in ranks]
+                for (l, e) in hits:
+                    mgr.lookup(l, e)
+                mgr.step(hits)
+                if step % 4 == 0:
+                    mgr.pool.end_interval()
+            dt_us = (time.time() - t0) * 1e6 / steps
+            out.append(
+                f"expert_tier/{name}/{policy},{dt_us:.1f},"
+                f"hbm_frac={mgr.fast_fraction():.3f};"
+                f"cost={mgr.modeled_cost():.0f};"
+                f"promoted={mgr.pool.vmstat.pgpromote_total}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

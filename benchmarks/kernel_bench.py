@@ -1,0 +1,61 @@
+"""Kernel microbenches: wall-clock of the jitted reference paths on CPU
+(the Pallas kernels themselves are TPU-targeted; interpret mode is a
+correctness harness, not a perf surface — see DESIGN.md)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    leaf = out[0] if isinstance(out, tuple) else out
+    leaf.block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        leaf = out[0] if isinstance(out, tuple) else out
+        leaf.block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick: bool = False) -> List[str]:
+    out = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    q = jax.random.normal(ks[0], (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    us = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    out.append(f"kernel/flash_attention_512,{us:.1f},B1_H8_S512_D64_ref")
+
+    F, Hkv, P, D, B, MP = 128, 4, 16, 64, 8, 16
+    qd = jax.random.normal(ks[0], (B, 16, D))
+    kp = jax.random.normal(ks[1], (F, Hkv, P, D))
+    vp = jax.random.normal(ks[2], (F, Hkv, P, D))
+    bt = jax.random.randint(ks[3], (B, MP), 0, F)
+    ln = jnp.full((B,), MP * P, jnp.int32)
+    us = _time(lambda *a: ops.paged_attention(*a), qd, kp, vp, bt, ln)
+    out.append(f"kernel/paged_attention,{us:.1f},B8_H16_P16xMP16_ref")
+
+    src = jax.random.normal(ks[0], (256, 16, 64))
+    idx = jnp.arange(32, dtype=jnp.int32)
+    us = _time(lambda a, b: ops.page_gather(a, b), src, idx)
+    out.append(f"kernel/page_gather_32,{us:.1f},256f_16x64_ref")
+
+    logits = jax.random.normal(ks[0], (4096, 64))
+    us = _time(lambda a: ops.router_topk(a, 6), logits)
+    out.append(f"kernel/router_topk_64e,{us:.1f},T4096_E64_k6_ref")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,156 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → measure.
+
+Runs a chosen (arch × shape) cell through ``repro.launch.dryrun.run_cell``
+under a sequence of named configuration variants (the PERF knobs and
+module-level defaults), logging the three roofline terms per variant to
+``results/perf_log.json``.  Each variant corresponds to one iteration
+entry in EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations --arch tinyllama-1.1b \
+      --shape train_4k --variants baseline,ce_onehot
+"""
+
+# NOTE: dryrun must be imported before jax does anything — it widens the
+# host platform to 512 devices.
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS first)
+
+import argparse
+import json
+import os
+import time
+from typing import Callable, Dict
+
+from repro.launch.dryrun import PERF, run_cell
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "perf_log.json")
+
+
+def _reset():
+    PERF["ce_onehot"] = False
+    PERF["ce_chunk_override"] = None
+    PERF["remat_policy"] = None
+    PERF["moe_ep"] = False
+    import repro.models.attention as A
+
+    A.DEFAULT_KV_CHUNK = 1024
+
+
+def v_moe_ep():
+    _reset()
+    PERF["moe_ep"] = True
+
+
+def v_moe_ep_onehot():
+    _reset()
+    PERF["moe_ep"] = True
+    PERF["ce_onehot"] = True
+
+
+def v_remat_dots():
+    _reset()
+    PERF["remat_policy"] = "dots"
+
+
+def v_all_train_opts():
+    _reset()
+    PERF["moe_ep"] = True
+    PERF["ce_onehot"] = True
+    PERF["remat_policy"] = "dots"
+
+
+def v_baseline():
+    _reset()
+
+
+def v_ce_onehot():
+    _reset()
+    PERF["ce_onehot"] = True
+
+
+def v_ce_chunk_2k():
+    _reset()
+    PERF["ce_onehot"] = True
+    PERF["ce_chunk_override"] = 2048
+
+
+def v_ce_chunk_128():
+    _reset()
+    PERF["ce_onehot"] = True
+    PERF["ce_chunk_override"] = 128
+
+
+def v_kv_chunk_2k():
+    _reset()
+    PERF["ce_onehot"] = True
+    import repro.models.attention as A
+
+    A.DEFAULT_KV_CHUNK = 2048
+
+
+def v_kv_chunk_512():
+    _reset()
+    PERF["ce_onehot"] = True
+    import repro.models.attention as A
+
+    A.DEFAULT_KV_CHUNK = 512
+
+
+VARIANTS: Dict[str, Callable] = {
+    "baseline": v_baseline,
+    "ce_onehot": v_ce_onehot,
+    "ce_chunk_2k": v_ce_chunk_2k,
+    "ce_chunk_128": v_ce_chunk_128,
+    "kv_chunk_2k": v_kv_chunk_2k,
+    "kv_chunk_512": v_kv_chunk_512,
+    "moe_ep": v_moe_ep,
+    "moe_ep_onehot": v_moe_ep_onehot,
+    "remat_dots": v_remat_dots,
+    "all_train_opts": v_all_train_opts,
+}
+
+
+def terms(cell: Dict) -> Dict[str, float]:
+    return {
+        "t_compute": cell["flops"] / PEAK_FLOPS,
+        "t_memory": cell["bytes_accessed"] / HBM_BW,
+        "t_collective": cell["collective_total"] / ICI_BW,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    args = ap.parse_args()
+
+    log = []
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            log = json.load(f)
+
+    for name in args.variants.split(","):
+        VARIANTS[name]()
+        t0 = time.time()
+        cell = run_cell(args.arch, args.shape, multi_pod=False, verbose=False)
+        entry = {
+            "arch": args.arch,
+            "shape": args.shape,
+            "variant": name,
+            "wall_s": round(time.time() - t0, 1),
+            **{k: cell.get(k) for k in ("flops", "bytes_accessed",
+                                        "collective_total", "collective_bytes")},
+            **terms(cell),
+        }
+        log.append(entry)
+        print(json.dumps(entry))
+    with open(RESULTS, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""§Roofline — three-term analysis per (arch × shape) from the dry-run.
+
+Reads ``results/dryrun_results.json`` (written by
+``python -m repro.launch.dryrun --all``) and derives, per single-pod cell:
+
+    compute    = HLO_FLOPs            / peak_FLOP/s            [s]
+    memory     = HLO_bytes_accessed   / HBM_bw                 [s]
+    collective = collective_bytes     / ICI link bw            [s]
+
+cost_analysis numbers are already per-device (the SPMD module), so no
+division by chip count.  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI (1 link assumed: conservative).
+
+Also reports MODEL_FLOPS (6·N·D train / 2·N·tokens serve, N_active for
+MoE) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_results.json")
+
+
+def _param_count(arch: str) -> Dict[str, float]:
+    """Total + active param counts (computed from the real param tree)."""
+    from repro.configs import get_config
+    from repro.models.model import init_params
+    import jax.numpy as jnp
+    from functools import partial
+
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(partial(init_params, cfg=cfg, dtype=jnp.bfloat16),
+                            jax.random.key(0))
+    total = sum(x.size for x in jax.tree_util.tree_leaves(shapes))
+    # active params for MoE: replace expert banks by top_k/n_experts share
+    active = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        frac = 1.0
+        if "moe" in names and names[-1] in ("wi_gate", "wi_up", "wo"):
+            moe = next(s.moe for s in cfg.all_specs() if s.moe is not None)
+            frac = moe.top_k / moe.n_experts
+        active += leaf.size * frac
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(arch: str, shape: str, n_dev: int) -> float:
+    """Per-device useful model FLOPs for the step kind."""
+    from repro.configs import SHAPES
+
+    seq, batch, kind = SHAPES[shape]
+    pc = _param_count(arch)
+    n = pc["active"]
+    if kind == "train":
+        return 6.0 * n * (seq * batch) / n_dev
+    if kind == "prefill":
+        return 2.0 * n * (seq * batch) / n_dev
+    return 2.0 * n * batch / n_dev  # decode: one token per sequence
+
+
+def analyze(results_path: str = RESULTS) -> List[Dict]:
+    with open(results_path) as f:
+        cells = json.load(f)
+    rows = []
+    seen_skips = set()
+    for c in cells:
+        if c.get("mesh") != "16x16" or c.get("status") != "ok":
+            if (c.get("status") == "skipped"
+                    and (c["arch"], c["shape"]) not in seen_skips):
+                seen_skips.add((c["arch"], c["shape"]))
+                rows.append({"arch": c["arch"], "shape": c["shape"],
+                             "status": "skipped"})
+            continue
+        t_comp = c["flops"] / PEAK_FLOPS
+        t_mem = c["bytes_accessed"] / HBM_BW
+        t_coll = c["collective_total"] / ICI_BW
+        dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+        mf = model_flops(c["arch"], c["shape"], c["n_devices"])
+        rows.append({
+            "arch": c["arch"],
+            "shape": c["shape"],
+            "status": "ok",
+            "t_compute_s": t_comp,
+            "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "bottleneck": dom[1],
+            "model_flops": mf,
+            "useful_ratio": mf / c["flops"] if c["flops"] > 0 else 0.0,
+            # roofline fraction: useful compute time / dominant-term time
+            "roofline_frac": (mf / PEAK_FLOPS) / max(t_comp, t_mem, t_coll),
+        })
+    return rows
+
+
+def run(quick: bool = False) -> List[str]:
+    if not os.path.exists(RESULTS):
+        return ["roofline/missing,0.0,run `python -m repro.launch.dryrun --all` first"]
+    out = []
+    for r in analyze():
+        if r["status"] == "skipped":
+            out.append(f"roofline/{r['arch']}/{r['shape']},0.0,skipped")
+            continue
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']},0.0,"
+            f"compute={r['t_compute_s']:.2e};memory={r['t_memory_s']:.2e};"
+            f"collective={r['t_collective_s']:.2e};bound={r['bottleneck']};"
+            f"useful={r['useful_ratio']:.3f};roofline={r['roofline_frac']:.3f}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

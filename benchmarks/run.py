@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("table1", "benchmarks.table1_throughput"),
+    ("chameleon", "benchmarks.chameleon_heatmap"),
+    ("ablations", "benchmarks.fig_ablation"),
+    ("table2", "benchmarks.table2_type_aware"),
+    ("table3", "benchmarks.table3_tmo"),
+    ("expert_tier", "benchmarks.expert_tiering"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        mod = importlib.import_module(modname)
+        try:
+            for line in mod.run(quick=args.quick):
+                print(line, flush=True)
+        except Exception as e:  # keep the suite going; a failure is visible
+            print(f"{key}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

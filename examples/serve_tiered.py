@@ -1,0 +1,77 @@
+"""Tiered serving demo: batched requests over the TPP-managed KV cache.
+
+Three sessions decode concurrently against a fast tier sized well below
+the total KV footprint; one session pauses mid-stream (its pages cool
+off and demote) and later resumes (hint faults promote them back).
+Prints per-phase placement stats — the serving-side Fig. 14 analogue.
+
+  PYTHONPATH=src python examples/serve_tiered.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import Tier, TppConfig
+from repro.models.model import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+
+def phase_stats(eng: ServingEngine, label: str) -> None:
+    s = eng.stats()
+    print(f"  [{label:12s}] local={s['local_fraction']:.3f} "
+          f"demoted={s['demoted']:4d} promoted={s['promoted']:4d} "
+          f"migrated={s['migrated_bytes']/1e6:.1f}MB "
+          f"fast_free={s['fast_free']}")
+
+
+def main() -> None:
+    cfg = get_smoke_config("gemma3-4b")  # 5:1 local:global pattern
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(
+        cfg, params,
+        EngineConfig(
+            page_size=4, num_fast=24, num_slow=128,
+            topk_pages=2, recent_pages=2, policy="tpp",
+            tpp=TppConfig(demote_budget=16, promote_budget=8),
+        ),
+    )
+    rng = np.random.default_rng(0)
+    rids = [
+        eng.add_request(list(rng.integers(0, cfg.vocab, 48)), max_new=96)
+        for _ in range(3)
+    ]
+    print(f"3 sessions × 48-token prompts; fast tier: 24 pages × "
+          f"{eng.ecfg.page_size} tokens (total KV ≫ fast tier)")
+
+    for _ in range(12):
+        eng.step()
+    phase_stats(eng, "warm-up")
+
+    eng.pause(rids[0])
+    for _ in range(20):
+        eng.step()
+    phase_stats(eng, "s0 paused")
+    paused_slow = sum(
+        1 for pid in eng.seqs[rids[0]].pages
+        if eng.kv.pool.pages[pid].tier == Tier.SLOW
+    )
+    print(f"    paused session: {paused_slow}/{len(eng.seqs[rids[0]].pages)} "
+          f"pages demoted to the slow tier")
+
+    eng.resume(rids[0])
+    for _ in range(16):
+        eng.step()
+    phase_stats(eng, "s0 resumed")
+
+    print("\ngenerated (first 12 tokens each):")
+    for rid in rids:
+        print(f"  req{rid}: {eng.requests[rid].out[:12]}")
+    eng.kv.pool.check_invariants()
+    print("\npool invariants hold after "
+          f"{eng.kv.pool.vmstat.pgdemote_total + eng.kv.pool.vmstat.pgpromote_total} "
+          "migrations ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end training driver: a ~100M-param LM for a few hundred steps.
+
+Exercises the full substrate — model zoo block stack, data pipeline,
+AdamW, checkpointing with restart, NaN containment, straggler watchdog —
+on the synthetic corpus.  Loss decreases from ~ln(V) as the model learns
+the corpus' bigram structure.
+
+  PYTHONPATH=src python examples/train_e2e.py --steps 300
+  # kill it mid-run and re-run: it resumes from the newest checkpoint.
+"""
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.data import DataConfig
+from repro.launch.train import train_loop
+from repro.models.attention import AttnConfig
+from repro.models.model import ModelConfig
+from repro.models.transformer import BlockSpec
+from repro.optim.adamw import AdamWConfig
+
+
+def lm_100m() -> ModelConfig:
+    """~100M params: 10L, d=640, GQA 10/2 heads, SwiGLU ff=1792."""
+    attn = AttnConfig(d_model=640, n_heads=10, n_kv_heads=2, head_dim=64)
+    block = BlockSpec(kind="attn", attn=attn, d_ff=1792, ffn_kind="swiglu")
+    return ModelConfig(
+        name="lm-100m", family="dense", d_model=640, vocab=32000,
+        stacks=(((block,), 10),),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    from repro.models import nn
+    from repro.models.model import init_params
+    import jax
+
+    n_params = nn.count_params(init_params(jax.random.PRNGKey(0), cfg))
+    print(f"model: {cfg.name}  params: {n_params/1e6:.1f}M")
+
+    report = train_loop(
+        cfg,
+        DataConfig(seq_len=args.seq_len, global_batch=args.batch),
+        AdamWConfig(lr=6e-4),
+        steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        accum=args.accum,
+        log_every=10,
+    )
+    print(
+        f"\ndone. steps={report.steps_run} resumed_from={report.resumed_from} "
+        f"loss {report.losses[0]:.3f} → {report.losses[-1]:.3f} "
+        f"(stragglers={report.stragglers}, skipped={report.skipped})"
+    )
+    assert report.losses[-1] < report.losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each module exports ``config()`` (exact published numbers) and
+``smoke_config()`` (reduced same-family variant for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+ARCHS: List[str] = [
+    "chatglm3_6b",
+    "phi3_medium_14b",
+    "gemma3_4b",
+    "tinyllama_1_1b",
+    "xlstm_350m",
+    "musicgen_medium",
+    "zamba2_2_7b",
+    "phi3_5_moe_42b",
+    "deepseek_v2_lite_16b",
+    "qwen2_vl_2b",
+]
+
+# canonical ids as given in the assignment → module names
+ALIASES: Dict[str, str] = {
+    "chatglm3-6b": "chatglm3_6b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "gemma3-4b": "gemma3_4b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "xlstm-350m": "xlstm_350m",
+    "musicgen-medium": "musicgen_medium",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()
+
+
+def list_archs() -> List[str]:
+    return list(ALIASES.keys())

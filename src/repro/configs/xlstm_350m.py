@@ -1,0 +1,34 @@
+"""xlstm-350m — attention-free, 24L, d=1024, 4H, vocab=50304;
+sLSTM + mLSTM blocks at 7:1 (pattern of 8: 7 mLSTM + 1 sLSTM)
+[arXiv:2405.04517].
+
+No KV cache → TPP page placement is inapplicable at serving time (see
+DESIGN.md §Arch-applicability); runs ``long_500k`` with O(1) state.
+"""
+
+from repro.models.model import ModelConfig
+from repro.models.ssm import MlstmConfig, SlstmConfig
+from repro.models.transformer import BlockSpec
+
+
+def _cfg(n_repeats, d_model, n_heads, vocab, chunk=256):
+    m = BlockSpec(kind="mlstm", mlstm=MlstmConfig(d_model=d_model, n_heads=n_heads, chunk=chunk))
+    s = BlockSpec(kind="slstm", slstm=SlstmConfig(d_model=d_model, n_heads=n_heads))
+    pattern = (m, m, m, m, m, m, m, s)
+    return ModelConfig(
+        name="xlstm-350m",
+        family="ssm",
+        d_model=d_model,
+        vocab=vocab,
+        stacks=((pattern, n_repeats),),
+        tie_embeddings=True,
+        subquadratic=True,
+    )
+
+
+def config() -> ModelConfig:
+    return _cfg(3, 1024, 4, 50304)  # 24 layers
+
+
+def smoke_config() -> ModelConfig:
+    return _cfg(1, 64, 4, 256, chunk=8)  # 8 layers

@@ -1,0 +1,49 @@
+"""TPP core: transparent page placement for tiered memory (paper §4-§5).
+
+Public surface:
+
+* :class:`~repro.core.types.TppConfig`, :class:`~repro.core.types.Tier`,
+  :class:`~repro.core.types.PageType` — configuration & enums.
+* :class:`~repro.core.page_pool.PagePool` — two-tier pool + LRU + watermarks.
+* :class:`~repro.core.tpp.TppPolicy` / :func:`~repro.core.tpp.make_policy`
+  — the paper's policy and its baselines.
+* :class:`~repro.core.chameleon.Chameleon` — the §3 profiler.
+* :class:`~repro.core.simulator.TieredSimulator` — trace-driven harness.
+"""
+
+from repro.core.chameleon import Chameleon
+from repro.core.page_pool import Page, PagePool
+from repro.core.simulator import SimResult, TieredSimulator, run_policy_comparison
+from repro.core.tpp import StepReport, TppPolicy, make_policy
+from repro.core.trace import WORKLOADS, TraceGenerator, make_trace
+from repro.core.types import (
+    DemoteFail,
+    PageFlags,
+    PageType,
+    PromoteFail,
+    Tier,
+    TppConfig,
+)
+from repro.core.vmstat import VmStat
+
+__all__ = [
+    "Chameleon",
+    "DemoteFail",
+    "Page",
+    "PagePool",
+    "PageFlags",
+    "PageType",
+    "PromoteFail",
+    "SimResult",
+    "StepReport",
+    "Tier",
+    "TieredSimulator",
+    "TppConfig",
+    "TppPolicy",
+    "TraceGenerator",
+    "VmStat",
+    "WORKLOADS",
+    "make_policy",
+    "make_trace",
+    "run_policy_comparison",
+]

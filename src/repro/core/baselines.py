@@ -1,0 +1,189 @@
+"""The paper's comparison systems (§6, Table 1), as pluggable policies.
+
+Every baseline drives the *same* :class:`PagePool` and data plane as TPP —
+only the placement logic differs, mirroring how the paper swaps kernels on
+identical hardware.
+
+* ``DefaultLinuxPolicy`` — unmodified Linux on a tiered system: local-first
+  allocation with overflow to the CXL node, **no migration in either
+  direction** (reclaim would swap to disk; the paper's experiments disable
+  swap and never hit it).  Pages stay where first placed.
+* ``NumaBalancingPolicy`` — upstream AutoNUMA (§2, §6.3.1): samples pages
+  on *all* nodes (wasted fast-tier faults = CPU overhead), promotes
+  instantly on fault with **no hysteresis**, but refuses to promote when
+  the fast tier is below the allocation watermark (it has no demotion to
+  make headroom, so under pressure promotion "effectively stops").
+* ``AutoTieringPolicy`` — [Kim et al., ATC'21] (§6.3.1): frequency-based
+  demotion (lowest access-count victims, not LRU), prompt promotion of
+  pages whose access frequency clears a threshold, and a **fixed-size
+  reserved buffer** for promotions with a *coupled* allocation/reclamation
+  path: the reserve is only refilled by allocation-pressure reclaim, so a
+  promotion surge exhausts it and promotions stall (the paper's Fig. 19
+  failure mode).
+* ``IdealPolicy`` — the paper's baseline: every page in fast memory (the
+  harness sizes the fast tier to the workload; asserts no overflow).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Sequence
+
+from repro.core.page_pool import PagePool
+from repro.core.tpp import StepReport
+from repro.core.types import (
+    DemoteFail,
+    PageFlags,
+    PromoteFail,
+    Tier,
+)
+
+
+class DefaultLinuxPolicy:
+    name = "linux"
+
+    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+        self.pool = pool
+
+    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+        # No demotion, no promotion.  LRU aging still happens (the kernel
+        # always ages), it just never feeds a migration.
+        self.pool.age_active(Tier.FAST)
+        self.pool.step += 1
+        return StepReport()
+
+
+class NumaBalancingPolicy:
+    name = "numa_balancing"
+
+    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+        self.pool = pool
+        self._rng = random.Random(seed)
+        self.sample_rate = pool.config.sample_rate
+        # Extra overhead accounting: AutoNUMA samples the fast tier too.
+        self.wasted_fast_faults = 0
+
+    def step(self, slow_hits: Sequence[int] = (), fast_hits: Sequence[int] = ()) -> StepReport:
+        pool = self.pool
+        report = StepReport()
+        # Fast-tier sampling achieves nothing on a two-tier system (there
+        # is nowhere better to move a fast page) — pure overhead (§6.3.1:
+        # "unnecessary sampling, 2% higher CPU overhead than TPP").
+        self.wasted_fast_faults += len(fast_hits)
+
+        for pid in slow_hits:
+            if self.sample_rate < 1.0 and self._rng.random() >= self.sample_rate:
+                continue
+            page = pool.pages.get(pid)
+            if page is None or page.tier != Tier.SLOW:
+                continue
+            pool.vmstat.pgpromote_sampled += 1
+            pool.vmstat.pgpromote_candidate += 1  # instant: every fault
+            if page.demoted:
+                pool.vmstat.pgpromote_candidate_demoted += 1
+            # Upstream NUMA balancing respects the watermark — with no
+            # demotion path there is no headroom, so this is the stall.
+            if pool.under_alloc_watermark():
+                pool.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
+                report.promote_failed += 1
+                continue
+            res = pool.promote_page(pid)
+            if res == PromoteFail.NONE:
+                report.promoted += 1
+            else:
+                report.promote_failed += 1
+        pool.age_active(Tier.FAST)
+        pool.step += 1
+        return report
+
+
+class AutoTieringPolicy:
+    name = "autotiering"
+
+    # Fraction of fast frames kept as the fixed promotion reserve.
+    RESERVE_FRACTION = 0.01
+    # Access-frequency threshold (touches within the history window) above
+    # which a slow page is considered hot enough to promote.
+    HOT_FREQ = 2
+
+    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+        self.pool = pool
+        self.reserve = max(1, int(self.RESERVE_FRACTION * pool.num_frames[Tier.FAST]))
+        self._reserve_left = self.reserve
+
+    def _demote_for_alloc(self, report: StepReport) -> None:
+        """Coupled reclaim: only when allocation pressure demands it."""
+        pool = self.pool
+        need = pool.wm_alloc - pool.free_frames(Tier.FAST)
+        if need <= 0:
+            return
+        # Frequency-based victim selection: lowest touch_count first.
+        victims = sorted(
+            (p for p in pool.pages.values()
+             if p.tier == Tier.FAST and not p.pinned),
+            key=lambda p: (p.touch_count, p.last_touch_step),
+        )[: min(need, pool.config.demote_budget)]
+        for page in victims:
+            res = pool.demote_page(page.pid)
+            if res == DemoteFail.NONE:
+                report.demoted += 1
+                # Coupled path: demotions replenish the promotion reserve.
+                self._reserve_left = min(self.reserve, self._reserve_left + 1)
+            else:
+                report.demote_failed += 1
+
+    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+        pool = self.pool
+        report = StepReport()
+        for pid in slow_hits:
+            page = pool.pages.get(pid)
+            if page is None or page.tier != Tier.SLOW:
+                continue
+            pool.vmstat.pgpromote_sampled += 1
+            if page.touch_count < self.HOT_FREQ:
+                continue  # timer/frequency filter
+            pool.vmstat.pgpromote_candidate += 1
+            if page.demoted:
+                pool.vmstat.pgpromote_candidate_demoted += 1
+            under_pressure = pool.free_frames(Tier.FAST) <= pool.wm_min
+            if under_pressure and self._reserve_left <= 0:
+                # Reserve exhausted under pressure → promotions stall
+                # (the Fig. 19 surge failure; refilled only by coupled
+                # allocation-driven reclaim).
+                pool.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
+                report.promote_failed += 1
+                continue
+            if pool.free_frames(Tier.FAST) == 0:
+                pool.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
+                report.promote_failed += 1
+                continue
+            res = pool.promote_page(pid)
+            if res == PromoteFail.NONE:
+                if under_pressure:
+                    self._reserve_left -= 1
+                report.promoted += 1
+            else:
+                report.promote_failed += 1
+        self._demote_for_alloc(report)
+        pool.age_active(Tier.FAST)
+        pool.step += 1
+        return report
+
+
+class IdealPolicy:
+    """All memory in the fast tier (the paper's normalization baseline)."""
+
+    name = "ideal"
+
+    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+        self.pool = pool
+        if pool.num_frames[Tier.SLOW] != 0:
+            raise ValueError(
+                "IdealPolicy expects a pool with num_slow=0 and num_fast "
+                ">= working set (that is the baseline's definition)"
+            )
+
+    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+        assert not slow_hits, "ideal baseline must never see slow hits"
+        self.pool.step += 1
+        return StepReport()

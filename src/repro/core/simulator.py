@@ -1,0 +1,293 @@
+"""Tier-faithful placement simulator.
+
+Runs a synthetic workload trace (``repro.core.trace``) against a
+:class:`PagePool` driven by any placement policy (TPP or a baseline) and
+charges modeled access costs per tier — the CPU-only stand-in for the
+paper's production runs (§6).  The *mechanism* is exact (real pool, real
+LRU, real migrations); only the clock is modeled:
+
+* fast-tier access  = 1.0 (local DRAM ~100 ns)
+* slow-tier access  = ``slow_cost`` (paper Fig. 2: CXL ≈ 1.5-3×)
+* migration         = ``migrate_cost`` per page (background, amortized)
+* refault (evicted) = ``refault_cost`` (major fault + swap-in analogue)
+
+Throughput is reported normalized to the ideal all-fast baseline exactly
+like the paper's Table 1 (accesses per unit modeled time, ideal = 1.0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.chameleon import Chameleon
+from repro.core.page_pool import PagePool
+from repro.core.tpp import make_policy
+from repro.core.trace import WORKLOADS, TraceGenerator, make_trace
+from repro.core.types import PageType, Tier, TppConfig
+from repro.core.vmstat import VmStat
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    workload: str
+    steps: int
+    total_accesses: int
+    modeled_time: float
+    ideal_time: float
+    vmstat: VmStat
+    # per-step timeline for the Fig. 14/15/17/18-style plots
+    local_fraction: List[float]
+    promote_rate: List[int]
+    demote_rate: List[int]
+    alloc_fast_rate: List[int]
+    # Fraction of application runtime that is memory-stall time in the
+    # ideal configuration.  The paper's applications lose ≤18% end-to-end
+    # even with most traffic remote at 2-3× latency (Table 1), i.e. they
+    # are far from 100% memory-bound; β captures that (MLP/compute overlap).
+    mem_stall_frac: float = 0.25
+
+    @property
+    def avg_access_cost(self) -> float:
+        """Mean modeled memory-access cost (ideal = 1.0)."""
+        return self.modeled_time / self.ideal_time if self.ideal_time else 1.0
+
+    @property
+    def raw_throughput_vs_ideal(self) -> float:
+        """Pure memory-time ratio (100%-memory-bound upper bound on loss)."""
+        return self.ideal_time / self.modeled_time if self.modeled_time else 1.0
+
+    @property
+    def throughput_vs_ideal(self) -> float:
+        """Application-level throughput normalized to ideal (Table 1).
+
+        runtime = (1-β)·compute + β·memtime, normalized so ideal = 1.
+        """
+        b = self.mem_stall_frac
+        return 1.0 / ((1.0 - b) + b * self.avg_access_cost)
+
+    @property
+    def mean_local_fraction(self) -> float:
+        return float(np.mean(self.local_fraction)) if self.local_fraction else 1.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "workload": self.workload,
+            "throughput_vs_ideal": round(self.throughput_vs_ideal, 4),
+            "raw_throughput": round(self.raw_throughput_vs_ideal, 4),
+            "local_fraction": round(self.mean_local_fraction, 4),
+            "demoted": self.vmstat.pgdemote_total,
+            "promoted": self.vmstat.pgpromote_total,
+            "ping_pong_rate": round(self.vmstat.ping_pong_rate, 4),
+            "evicted": self.vmstat.pswpout,
+            "alloc_stalls": self.vmstat.pgalloc_stall,
+        }
+
+
+class TieredSimulator:
+    """Drive (trace × pool × policy) and account modeled time."""
+
+    def __init__(
+        self,
+        workload: str,
+        policy: str,
+        fast_frames: int,
+        slow_frames: int,
+        config: Optional[TppConfig] = None,
+        slow_cost: float = 2.0,
+        migrate_cost: float = 0.05,
+        refault_cost: float = 50.0,
+        interval_steps: int = 4,
+        seed: int = 0,
+        profiler: Optional[Chameleon] = None,
+        trace: Optional[TraceGenerator] = None,
+    ) -> None:
+        self.workload = workload
+        self.policy_name = policy
+        self.slow_cost = slow_cost
+        self.migrate_cost = migrate_cost
+        self.refault_cost = refault_cost
+        self.interval_steps = interval_steps
+        self.pool = PagePool(fast_frames, slow_frames, config=config)
+        self.policy = make_policy(policy, self.pool, seed=seed)
+        self.trace = trace or make_trace(workload, seed=seed)
+        self.profiler = profiler
+        # trace-local index -> pid (None if evicted)
+        self._pid_of: Dict[int, Optional[int]] = {}
+        self._ptype_of: Dict[int, PageType] = {}
+        self._evicted_pids: set = set()
+        self.pool.on_evict = self._note_evict
+
+    def _note_evict(self, pid: int) -> None:
+        self._evicted_pids.add(pid)
+
+    # ---------------------------------------------------------------- #
+    def run(self, steps: int, measure_from: int = 0) -> SimResult:
+        """Run ``steps``; throughput accounting starts at ``measure_from``.
+
+        The paper reports steady-state throughput after workloads converge
+        (§6.1: convergence takes minutes); ``measure_from`` excludes the
+        warm-up transient the same way.
+        """
+        modeled_time = 0.0
+        ideal_time = 0.0
+        total_accesses = 0
+        local_frac: List[float] = []
+        promote_rate: List[int] = []
+        demote_rate: List[int] = []
+        alloc_fast_rate: List[int] = []
+
+        for step_no in range(steps):
+            ev = next(self.trace)
+            alloc_fast_before = self.pool.vmstat.pgalloc_fast
+
+            # -- allocations ---------------------------------------- #
+            for idx, ptype in ev.allocs:
+                self._alloc_idx(idx, ptype)
+
+            # -- frees ----------------------------------------------- #
+            for idx in ev.frees:
+                pid = self._pid_of.pop(idx, None)
+                self._ptype_of.pop(idx, None)
+                if pid is not None and pid in self.pool.pages:
+                    if self.profiler is not None:
+                        self.profiler.note_free(pid)
+                    self.pool.free(pid)
+
+            # -- accesses -------------------------------------------- #
+            step_time = 0.0
+            step_ideal = 0.0
+            slow_hits: List[int] = []
+            fast_hits: List[int] = []
+            prof_events = []
+            for idx in ev.accesses:
+                if idx not in self._ptype_of:
+                    continue  # freed before access
+                pid = self._pid_of.get(idx)
+                if pid is None or pid not in self.pool.pages:
+                    # refault: page was evicted → recreate (major fault)
+                    step_time += self.refault_cost
+                    self._alloc_idx(idx, self._ptype_of[idx])
+                    pid = self._pid_of[idx]
+                tier = self.pool.touch(pid)
+                if tier == Tier.SLOW:
+                    step_time += self.slow_cost
+                    slow_hits.append(pid)
+                else:
+                    step_time += 1.0
+                    fast_hits.append(pid)
+                step_ideal += 1.0
+                if self.profiler is not None:
+                    prof_events.append((pid, self.pool.pages[pid].page_type))
+            if self.profiler is not None:
+                self.profiler.record(prof_events)
+
+            # -- policy ---------------------------------------------- #
+            if self.policy_name == "numa_balancing":
+                report = self.policy.step(slow_hits, fast_hits)  # type: ignore[call-arg]
+            else:
+                report = self.policy.step(slow_hits)
+            step_time += (report.demoted + report.promoted) * self.migrate_cost
+            if step_no >= measure_from:
+                modeled_time += step_time
+                ideal_time += step_ideal
+                total_accesses += len(slow_hits) + len(fast_hits)
+
+            # -- bookkeeping ------------------------------------------ #
+            vs = self.pool.vmstat
+            step_total = len(slow_hits) + len(fast_hits)
+            local_frac.append(len(fast_hits) / step_total if step_total else 1.0)
+            promote_rate.append(report.promoted)
+            demote_rate.append(report.demoted)
+            alloc_fast_rate.append(vs.pgalloc_fast - alloc_fast_before)
+
+            if (step_no + 1) % self.interval_steps == 0:
+                self.pool.end_interval()
+                if self.profiler is not None:
+                    self.profiler.end_interval()
+
+        return SimResult(
+            policy=self.policy_name,
+            workload=self.workload,
+            steps=steps,
+            total_accesses=total_accesses,
+            modeled_time=modeled_time,
+            ideal_time=ideal_time,
+            vmstat=self.pool.vmstat,
+            local_fraction=local_frac,
+            promote_rate=promote_rate,
+            demote_rate=demote_rate,
+            alloc_fast_rate=alloc_fast_rate,
+        )
+
+    # ---------------------------------------------------------------- #
+    def _alloc_idx(self, idx: int, ptype: PageType) -> None:
+        try:
+            page = self.pool.allocate(ptype)
+        except MemoryError:
+            # Both tiers full: evict the coldest unpinned slow page, then
+            # retry (the engine-level OOM handler).
+            victim = self._coldest_slow_page()
+            if victim is None:
+                raise
+            self.pool.evict_page(victim)
+            page = self.pool.allocate(ptype)
+        self._pid_of[idx] = page.pid
+        self._ptype_of[idx] = ptype
+
+    def _coldest_slow_page(self) -> Optional[int]:
+        cands = self.pool.scan_reclaim_candidates(Tier.SLOW, 1)
+        if cands:
+            return cands[0]
+        # fall back: any slow page
+        for p in self.pool.pages.values():
+            if p.tier == Tier.SLOW and not p.pinned:
+                return p.pid
+        return None
+
+
+def run_policy_comparison(
+    workload: str,
+    fast_frames: int,
+    slow_frames: int,
+    steps: int = 64,
+    policies: Sequence[str] = ("linux", "tpp", "numa_balancing", "autotiering"),
+    seed: int = 0,
+    slow_cost: float = 2.0,
+    config: Optional[TppConfig] = None,
+    total_pages: Optional[int] = None,
+    measure_from: int = 0,
+) -> Dict[str, SimResult]:
+    """Run the same trace under each policy + the ideal baseline (Table 1)."""
+    results: Dict[str, SimResult] = {}
+    for pol in policies:
+        sim = TieredSimulator(
+            workload,
+            pol,
+            fast_frames,
+            slow_frames,
+            config=config,
+            slow_cost=slow_cost,
+            seed=seed,
+            trace=make_trace(workload, seed=seed, total_pages=total_pages),
+        )
+        results[pol] = sim.run(steps, measure_from=measure_from)
+    # ideal: all frames fast (sized for live peak incl. churn overshoot)
+    base = total_pages or WORKLOADS[workload].total_pages
+    ideal_frames = max(fast_frames + slow_frames, int(1.3 * base)) + 64
+    ideal = TieredSimulator(
+        workload,
+        "ideal",
+        ideal_frames,
+        0,
+        config=config,
+        slow_cost=slow_cost,
+        seed=seed,
+        trace=make_trace(workload, seed=seed, total_pages=total_pages),
+    )
+    results["ideal"] = ideal.run(steps, measure_from=measure_from)
+    return results

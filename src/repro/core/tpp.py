@@ -1,0 +1,197 @@
+"""TPP — the paper's transparent page placement policy (§5).
+
+Drives a :class:`~repro.core.page_pool.PagePool` with the four mechanisms:
+
+1. **Lightweight demotion** (§5.1): reclaim candidates are taken from the
+   fast tier's *inactive* LRU tails (both anon and file) and *migrated* to
+   the slow tier instead of swapped.  On slow-tier-full, fall back to
+   eviction (the swap analogue), per page.
+2. **Decoupled watermarks** (§5.2): background demotion triggers whenever
+   fast-tier free frames drop below ``wm_demote`` (demote_scale_factor)
+   and keeps reclaiming until the headroom is restored, *independent of*
+   the allocation path, which only needs ``wm_min``.
+3. **Promotion with hysteresis** (§5.3): sampled slow-tier accesses
+   ("NUMA hint faults", restricted to the slow node) promote a page only
+   if it is already on the **active** LRU; a faulted inactive page is
+   activated instead and must fault again (Fig. 13).  Promotion ignores
+   the allocation watermark.
+4. **Page-type-aware allocation** (§5.4): handled by the pool via
+   ``TppConfig.file_to_slow``.
+
+The policy exposes one entry point, :meth:`step`, fed with the set of
+slow-tier page hits observed by the data plane this step.  It is a
+host-side control loop — the same role the kernel's kswapd/NUMA-balancing
+tasks play — while the actual payload copies happen in the engine
+(``on_migrate`` hook of the pool).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Iterable, List, Optional, Sequence
+
+from repro.core.page_pool import PagePool
+from repro.core.types import (
+    DemoteFail,
+    PageFlags,
+    PageType,
+    PromoteFail,
+    Tier,
+    TppConfig,
+)
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one policy step did (for benchmarks and tests)."""
+
+    demoted: int = 0
+    promoted: int = 0
+    evicted: int = 0
+    demote_failed: int = 0
+    promote_filtered: int = 0
+    promote_failed: int = 0
+
+
+class TppPolicy:
+    """The full TPP mechanism."""
+
+    name = "tpp"
+
+    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+        self.pool = pool
+        self.config: TppConfig = pool.config
+        self._rng = random.Random(seed)
+
+    # ------------------------------------------------------------------ #
+    # promotion path (§5.3)
+    # ------------------------------------------------------------------ #
+    def _sample_hint_faults(self, slow_hits: Sequence[int]) -> List[int]:
+        """NUMA-hint-fault sampling, restricted to the slow tier.
+
+        The paper limits NUMA Balancing's sampling to CXL nodes only; the
+        fast tier is never sampled (no wasted faults on local memory).
+        """
+        rate = self.config.sample_rate
+        if rate >= 1.0:
+            return list(slow_hits)
+        return [pid for pid in slow_hits if self._rng.random() < rate]
+
+    def _promote(self, candidates: Iterable[int], report: StepReport) -> None:
+        pool = self.pool
+        budget = self.config.promote_budget
+        for pid in candidates:
+            page = pool.pages.get(pid)
+            if page is None or page.tier != Tier.SLOW:
+                continue  # freed or already migrated this step
+            pool.vmstat.pgpromote_sampled += 1
+
+            if self.config.active_lru_filter and not page.active:
+                # Fig. 13 step ②: activate instead of promoting; the page
+                # must still be hot at its *next* fault to be promoted.
+                pool.vmstat.promote_fail(PromoteFail.NOT_ACTIVE)
+                report.promote_filtered += 1
+                if not page.accessed:
+                    page.flags |= PageFlags.ACCESSED
+                pool._activate(page)
+                continue
+
+            pool.vmstat.pgpromote_candidate += 1
+            if page.demoted:
+                pool.vmstat.pgpromote_candidate_demoted += 1
+
+            if report.promoted >= budget:
+                pool.vmstat.promote_fail(PromoteFail.BUDGET)
+                report.promote_failed += 1
+                continue
+
+            if self.config.decoupled:
+                # Promotion ignores wm_alloc (§5.3) but does need a frame.
+                # Demotion is *continuous* (kswapd keeps reclaiming while
+                # promotions land), so promotion pressure below the
+                # headroom triggers more background demotion within the
+                # same interval — not a one-shot snapshot.
+                if (pool.free_frames(Tier.FAST) == 0
+                        and report.demoted < self.config.demote_budget):
+                    self._demote(report)
+            elif pool.under_alloc_watermark():
+                # Coupled ablation (Fig. 17): reclaim serves allocation
+                # only; promotion is watermark-gated and starves under
+                # pressure — the paper's "promotion almost halts".
+                pool.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
+                report.promote_failed += 1
+                continue
+            res = pool.promote_page(pid)
+            if res == PromoteFail.NONE:
+                report.promoted += 1
+            else:
+                report.promote_failed += 1
+
+    # ------------------------------------------------------------------ #
+    # demotion path (§5.1 + §5.2)
+    # ------------------------------------------------------------------ #
+    def _demote(self, report: StepReport) -> None:
+        pool = self.pool
+        if self.config.decoupled:
+            need = pool.wm_demote - pool.free_frames(Tier.FAST)
+        else:
+            # Coupled ablation (Fig. 17): reclaim only reacts to the
+            # allocation watermark, with no extra headroom.
+            need = pool.wm_alloc - pool.free_frames(Tier.FAST)
+        if need <= 0:
+            return
+        nr = min(need, self.config.demote_budget - report.demoted)
+        if nr <= 0:
+            return
+        # Age the active lists first so the inactive tails reflect recency.
+        pool.age_active(Tier.FAST)
+        candidates = pool.scan_reclaim_candidates(Tier.FAST, nr)
+        for pid in candidates:
+            res = pool.demote_page(pid)
+            if res == DemoteFail.NONE:
+                report.demoted += 1
+            elif res == DemoteFail.SLOW_FULL:
+                # §5.1: fall back to default reclamation for that page.
+                page = pool.pages[pid]
+                if not page.pinned:
+                    pool.evict_page(pid)
+                    report.evicted += 1
+                else:
+                    report.demote_failed += 1
+            else:
+                report.demote_failed += 1
+
+    # ------------------------------------------------------------------ #
+    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+        """One control-loop iteration.
+
+        ``slow_hits`` — page ids whose accesses this step were served by
+        the slow tier (the engine's block-table lookups make these free
+        to collect; see DESIGN.md §2).
+        """
+        report = StepReport()
+        self._promote(self._sample_hint_faults(slow_hits), report)
+        self._demote(report)
+        self.pool.step += 1
+        return report
+
+
+def make_policy(
+    name: str,
+    pool: PagePool,
+    seed: int = 0,
+):
+    """Factory over TPP and the paper's comparison policies."""
+    from repro.core import baselines  # local import to avoid cycle
+
+    table = {
+        "tpp": TppPolicy,
+        "linux": baselines.DefaultLinuxPolicy,
+        "numa_balancing": baselines.NumaBalancingPolicy,
+        "autotiering": baselines.AutoTieringPolicy,
+        "ideal": baselines.IdealPolicy,
+    }
+    if name not in table:
+        raise ValueError(f"unknown policy {name!r}; choose from {sorted(table)}")
+    return table[name](pool, seed=seed)

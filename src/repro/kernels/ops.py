@@ -1,0 +1,80 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On a real TPU backend the kernels run compiled (``interpret=False``);
+on this CPU container they run in interpret mode, and callers that want
+XLA-native CPU performance can pass ``impl='ref'`` to use the jnp
+oracles.  The default (``impl='auto'``) picks the kernel on TPU and the
+reference elsewhere — so the same call sites are production-correct on
+both.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.page_migrate import page_gather as _gather, page_scatter as _scatter
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.router_topk import router_topk as _router
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def _pick(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "kernel" if _on_tpu() else "ref"
+
+
+# --------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale", "impl", "interpret"))
+def flash_attention(q, k, v, causal=True, window=None, scale=None, impl="auto", interpret=False):
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, scale=None,
+                    impl="auto", interpret=False):
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.paged_attention_ref(q, k_pages, v_pages, block_table, lengths, scale=scale)
+    return _paged(q, k_pages, v_pages, block_table, lengths, scale=scale,
+                  interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def page_gather(src, frames, impl="auto", interpret=False):
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.page_gather_ref(src, frames)
+    return _gather(src, frames, interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"), donate_argnums=(0,))
+def page_scatter(dst, frames, pages, impl="auto", interpret=False):
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.page_scatter_ref(dst, frames, pages)
+    return _scatter(dst, frames, pages, interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "interpret"))
+def router_topk(logits, k, impl="auto", interpret=False):
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.router_topk_ref(logits, k)
+    return _router(logits, k, interpret=interpret or not _on_tpu())

@@ -1,0 +1,83 @@
+"""Page migration (demote/promote) as Pallas gather/scatter kernels.
+
+The data plane of TPP's §5.1 "migration instead of swapping": moving a
+KV page between tiers is a frame copy indexed by the page table.  On
+TPU the HBM-side halves of those copies are these kernels; the host leg
+rides the DMA engine via ``jax.device_put`` between memory kinds.
+
+* ``page_gather``: ``out[i] = src[frames[i]]`` — collect migrating pages
+  into a contiguous staging buffer (also the slow-page read path of the
+  two-tier attention).
+* ``page_scatter``: ``dst[frames[i]] = pages[i]`` — land incoming pages
+  in their target frames.  Implemented with input/output aliasing so
+  untouched frames are preserved (true in-place scatter).
+
+Both use scalar-prefetched frame indices in the BlockSpec index_map —
+the copy streams one page per grid step with no materialized gather.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+def page_gather(
+    src: jax.Array,  # (F, ...) frames
+    frames: jax.Array,  # (N,) int32
+    interpret: bool = False,
+) -> jax.Array:
+    N = frames.shape[0]
+    inner = src.shape[1:]
+    blk = (1,) + inner
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, idx: (idx[i],) + (0,) * len(inner)),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, idx: (i,) + (0,) * len(inner)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N,) + inner, src.dtype),
+        interpret=interpret,
+    )(frames, src)
+
+
+def _scatter_kernel(idx_ref, pages_ref, dst_ref, out_ref):
+    out_ref[...] = pages_ref[...]
+
+
+def page_scatter(
+    dst: jax.Array,  # (F, ...) frames
+    frames: jax.Array,  # (N,) int32 — distinct target frames
+    pages: jax.Array,  # (N, ...) payloads
+    interpret: bool = False,
+) -> jax.Array:
+    N = frames.shape[0]
+    inner = dst.shape[1:]
+    blk = (1,) + inner
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, idx: (i,) + (0,) * len(inner)),
+            pl.BlockSpec(blk, lambda i, idx: (idx[i],) + (0,) * len(inner)),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, idx: (idx[i],) + (0,) * len(inner)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={2: 0},  # dst (input 2, after scalar arg) aliases the output
+        interpret=interpret,
+    )(frames, pages, dst)

@@ -1,0 +1,126 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+One new token per sequence attends over that sequence's KV **pages**
+(the TPP migration unit).  TPU mapping:
+
+* The block table is **scalar-prefetched** (``PrefetchScalarGridSpec``):
+  page frame ids land in SMEM before the kernel body runs, and the K/V
+  BlockSpec ``index_map`` uses them to stream exactly the pages the
+  sequence owns, HBM→VMEM, one page per minor-most grid step — the
+  gather never materializes.
+* Grid ``(B, MP)``; online-softmax state (m, l, acc) in VMEM scratch
+  carries across the page dimension, flushed at the last page.
+* GQA via q layout ``(B, Hkv, G, D)``; scores/PV are batched
+  ``dot_general`` over the kv-head dim (MXU).
+
+Pages hold post-RoPE keys, so page order is irrelevant to correctness —
+which is exactly why TPP can migrate them freely.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _paged_kernel(
+    bt_ref,  # scalar-prefetch: (B, MP) int32 block table
+    len_ref,  # scalar-prefetch: (B,) int32 lengths
+    q_ref,  # (1, Hkv, G, D)
+    k_ref,  # (1, Hkv, P, D) — page selected by index_map
+    v_ref,
+    o_ref,  # (1, Hkv, G, D)
+    acc_ref, m_ref, l_ref,  # scratch: (Hkv, G, D) f32, (Hkv, G, 1) ×2
+    *,
+    scale: float,
+    page_size: int,
+):
+    b = pl.program_id(0)
+    ip = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (Hkv, G, D)
+    k = k_ref[0].astype(jnp.float32)  # (Hkv, P, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    # batched over kv-heads: (Hkv, G, P)
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    # valid tokens in this page
+    length = len_ref[b]
+    t_pos = ip * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 2
+    )
+    mask = t_pos < length
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+    m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=2, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ip == np_ - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (F, Hkv, P, D)
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (B, MP) int32
+    lengths: jax.Array,  # (B,) int32
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    F, Hkv, P, _ = k_pages.shape
+    MP = block_table.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page_size=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, MP),
+        in_specs=[
+            pl.BlockSpec((1, Hkv, G, D), lambda b, ip, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, P, D), lambda b, ip, bt, ln: (bt[b, ip], 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, P, D), lambda b, ip, bt, ln: (bt[b, ip], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hkv, G, D), lambda b, ip, bt, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G, D), jnp.float32),
+            pltpu.VMEM((Hkv, G, 1), jnp.float32),
+            pltpu.VMEM((Hkv, G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

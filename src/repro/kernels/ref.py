@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,  # (B, Hkv, T, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.reshape(B, Hkv, G, S, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (F, Hkv, P, D)
+    v_pages: jax.Array,  # (F, Hkv, P, D)
+    block_table: jax.Array,  # (B, MP) int32 — frame per logical page
+    lengths: jax.Array,  # (B,) int32 — valid tokens per sequence
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    F, Hkv, P, _ = k_pages.shape
+    MP = block_table.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    # gather per sequence: (B, MP, Hkv, P, D) → (B, Hkv, MP*P, D)
+    kg = k_pages[block_table]  # (B, MP, Hkv, P, D)
+    vg = v_pages[block_table]
+    kg = jnp.moveaxis(kg, 2, 1).reshape(B, Hkv, MP * P, D)
+    vg = jnp.moveaxis(vg, 2, 1).reshape(B, Hkv, MP * P, D)
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bhtd->bhgt", qf, kg.astype(jnp.float32))
+    t_pos = jnp.arange(MP * P)[None, :]
+    valid = t_pos < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def page_gather_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = src[idx[i]] — page gather (promotion read path)."""
+    return src[idx]
+
+
+def page_scatter_ref(dst: jax.Array, idx: jax.Array, pages: jax.Array) -> jax.Array:
+    """dst[idx[i]] = pages[i] — page scatter (demotion write path)."""
+    return dst.at[idx].set(pages)
+
+
+def router_topk_ref(
+    logits: jax.Array, k: int  # (T, E)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """softmax probs, top-k values (renormalized), top-k indices."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return probs, vals, idx

@@ -1,0 +1,477 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each
+assigned architecture and input shape, the corresponding step function
+(``train_step`` / ``prefill_step`` / ``serve_step``) is jit-lowered with
+ShapeDtypeStruct inputs (zero allocation) onto the production meshes —
+(16, 16) single pod and (2, 16, 16) multi-pod — and ``.compile()`` must
+succeed.  The compiled artifact yields:
+
+* ``memory_analysis()``  — per-device bytes (proves HBM fit),
+* ``cost_analysis()``    — HLO FLOPs/bytes for §Roofline,
+* collective bytes       — parsed from the post-SPMD HLO text
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute operand sizes).
+
+NOTE the XLA_FLAGS line above MUST run before any jax import — jax locks
+the device count at first init.  Never set that flag in conftest.py or
+pyproject: smoke tests and benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --out dryrun_results.json
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import ALIASES, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (
+    shard_batch,
+    shard_decode_state,
+    shard_opt_state,
+    shard_params,
+    zero1_shardings,
+)
+from repro.models.model import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+)
+from repro.optim.adamw import AdamWConfig
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md §4)
+LONG_OK = {"gemma3-4b", "xlstm-350m", "zamba2-2.7b"}
+
+# per-arch train-time knobs (memory fit; see EXPERIMENTS.md §Dry-run)
+CE_CHUNK_DEFAULT = 512  # stream unembed+CE: never materialize (B,S,V) fp32
+CE_CHUNK = {"musicgen-medium": 0}  # 4-codebook labels; vocab is tiny (2048)
+N_PATCHES = 256  # vlm stub prefix length
+# microbatch accumulation: per-block remat stores the residual stream per
+# layer boundary (L × tokens_dev × d_model × 2B); archs where that exceeds
+# v5e HBM scan over microbatches (activation peak divides by accum)
+ACCUM = {
+    "phi3-medium-14b": 8,
+    "chatglm3-6b": 4,
+    "gemma3-4b": 4,
+    "musicgen-medium": 4,
+    "phi3.5-moe-42b-a6.6b": 4,
+    "deepseek-v2-lite-16b": 2,
+    "zamba2-2.7b": 2,
+}
+
+
+def unrolled(cfg: ModelConfig) -> ModelConfig:
+    """Rewrite stacks to a single repeat (pattern unrolled)."""
+    new_stacks = tuple((tuple(pat) * reps, 1) for pat, reps in cfg.stacks)
+    return dataclasses.replace(cfg, stacks=new_stacks)
+
+
+def with_reps(cfg: ModelConfig, reps: Tuple[int, ...]) -> ModelConfig:
+    """Same architecture with per-stack repeat counts replaced."""
+    new_stacks = tuple(
+        (pat, r) for (pat, _), r in zip(cfg.stacks, reps)
+    )
+    return dataclasses.replace(cfg, stacks=new_stacks)
+
+
+# --------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------- #
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given workload shape."""
+    seq, batch, kind = SHAPES[shape_name]
+    i32 = jnp.int32
+    if kind == "train":
+        tok_shape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, seq)
+        batch_d = {
+            "tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+            "labels": jax.ShapeDtypeStruct(tok_shape, i32),
+        }
+        if cfg.vision_stub:
+            batch_d["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, N_PATCHES, cfg.d_model), jnp.bfloat16
+            )
+        return batch_d
+    if kind == "prefill":
+        tok_shape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, seq)
+        d = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+        if cfg.vision_stub:
+            d["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, N_PATCHES, cfg.d_model), jnp.bfloat16
+            )
+        return d
+    # decode: one new token against caches of length seq
+    tok_shape = (batch, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, 1)
+    return {
+        "tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+        "cur_len": jax.ShapeDtypeStruct((batch,), i32),
+    }
+
+
+# --------------------------------------------------------------------- #
+# step builders
+# --------------------------------------------------------------------- #
+# §Perf hillclimb knobs — mutated by the perf driver before run_cell
+# (each entry documents one hypothesis→change iteration in EXPERIMENTS.md)
+PERF = {
+    "ce_onehot": False,   # one-hot CE contraction vs take_along_axis gather
+    "ce_chunk_override": None,  # chunk size for the streamed CE
+    "remat_policy": None,  # None=full remat | "dots"=save matmul outputs
+    "moe_ep": True,  # expert-parallel sharding constraints in moe_fwd (§Perf B/C)
+}
+
+
+def _remat_policy():
+    if PERF["remat_policy"] == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def _apply_moe_ep():
+    import repro.models.moe as _moe
+
+    _moe.EP_AXIS = "model" if PERF["moe_ep"] else None
+
+
+def build_train(cfg: ModelConfig, arch: str, accum_override=None):
+    opt_cfg = AdamWConfig()
+    ce_chunk = PERF["ce_chunk_override"] or CE_CHUNK.get(arch, CE_CHUNK_DEFAULT)
+    accum = accum_override if accum_override is not None else ACCUM.get(arch, 1)
+
+    def loss_of(p, mb):
+        return loss_fn(p, cfg, mb, impl="chunked", remat=True,
+                       remat_policy=_remat_policy(),
+                       ce_chunk=ce_chunk, ce_onehot=PERF["ce_onehot"])
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # microbatch accumulation (scan): activation peak = 1/accum
+            def slice_mb(i):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(
+                        (accum, x.shape[0] // accum) + x.shape[1:]
+                    )[i],
+                    batch,
+                )
+
+            def body(carry, i):
+                g_acc, l_acc = carry
+                (l, met), g = grad_fn(params, slice_mb(i))
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, l_acc + l), met
+
+            g0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            (grads, loss_sum), mets = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), jnp.arange(accum)
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], mets)
+        new_params, new_opt, om = optim.update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step, opt_cfg
+
+
+def build_prefill(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(
+            params,
+            cfg,
+            batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            impl="chunked",
+            remat=True,
+            last_only=True,
+        )
+        return logits
+
+    return prefill_step
+
+
+def build_serve(cfg: ModelConfig):
+    def serve_step(params, states, batch):
+        logits, new_states = decode_step(
+            params, cfg, batch["tokens"], states, batch["cur_len"]
+        )
+        return logits, new_states
+
+    return serve_step
+
+
+# --------------------------------------------------------------------- #
+# collective-bytes parser (post-SPMD HLO text)
+# --------------------------------------------------------------------- #
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\([^)]*\)|[\w\[\],{}\s/]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64)\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+          "pred": 1, "f64": 8, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shape_str):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+# --------------------------------------------------------------------- #
+# one cell
+# --------------------------------------------------------------------- #
+def _compile_step(cfg: ModelConfig, arch: str, shape_name: str, mesh, dtype,
+                  cost_mode: bool = False):
+    """Lower + compile the right step for one config variant.
+
+    ``cost_mode=True`` (the tiny extrapolation variants) forces accum=1 —
+    the microbatch scan's body would otherwise be cost-counted once
+    (total FLOPs are accum-invariant; only scheduling differs)."""
+    seq, batch, kind = SHAPES[shape_name]
+    params_s = jax.eval_shape(partial(init_params, cfg=cfg, dtype=dtype), jax.random.key(0))
+    p_shard = shard_params(params_s, mesh, cfg=cfg)
+    specs = input_specs(cfg, shape_name)
+    with mesh:
+        if kind == "train":
+            step, opt_cfg = build_train(cfg, arch, accum_override=1 if cost_mode else None)
+            opt_s = jax.eval_shape(partial(optim.init, cfg=opt_cfg), params_s)
+            o_shard = shard_opt_state(opt_s, p_shard, mesh)
+            o_shard = type(o_shard)(
+                step=o_shard.step,
+                m=zero1_shardings(o_shard.m, opt_s.m, mesh),
+                v=zero1_shardings(o_shard.v, opt_s.v, mesh),
+                master=zero1_shardings(o_shard.master, opt_s.master, mesh)
+                if o_shard.master is not None else None,
+            )
+            b_shard = shard_batch(mesh, specs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+            )
+            lowered = jitted.lower(params_s, opt_s, specs)
+        elif kind == "prefill":
+            step = build_prefill(cfg)
+            b_shard = shard_batch(mesh, specs)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_s, specs)
+        else:  # decode
+            step = build_serve(cfg)
+            states_s = jax.eval_shape(
+                partial(init_decode_state, cfg=cfg, batch=batch, max_len=seq, dtype=dtype)
+            )
+            s_shard = shard_decode_state(states_s, mesh)
+            b_shard = shard_batch(mesh, specs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, s_shard, b_shard),
+                out_shardings=(None, s_shard),
+                donate_argnums=(1,),  # caches update in place (aliasing)
+            )
+            lowered = jitted.lower(params_s, states_s, specs)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _costs_of(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "coll": coll,
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    dtype=jnp.bfloat16,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    """One (arch × shape × mesh) cell.
+
+    Two-part protocol:
+
+    1. **Full scanned compile** — the production form; proves lowering +
+       SPMD partitioning at full depth and yields ``memory_analysis``.
+    2. (single-pod only) **Cost extrapolation** — XLA's cost_analysis
+       counts a while-loop body once regardless of trip count, so
+       scanned costs undercount repeats; fully unrolling is compile-
+       prohibitive for the 40-54-layer archs.  Costs are affine in the
+       per-stack repeat count (each repeat adds an identical block), so
+       we lower tiny variants — all-stacks×1 and one bump to ×2 per
+       stack — and extrapolate exactly:
+           F(R) = F(1) + Σ_i (R_i − 1)·(F(bump_i) − F(1)).
+    """
+    cfg = get_config(arch)
+    seq, batch, kind = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "pure full-attention arch; long_500k needs sub-quadratic"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    _apply_moe_ep()
+    t0 = time.time()
+    compiled = _compile_step(cfg, arch, shape_name, mesh, dtype)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    full_reps = tuple(r for _, r in cfg.stacks)
+    if not multi_pod:
+        ones = tuple(1 for _ in cfg.stacks)
+        base = _costs_of(_compile_step(unrolled(with_reps(cfg, ones)), arch,
+                                       shape_name, mesh, dtype, cost_mode=True))
+        flops = base["flops"]
+        nbytes = base["bytes"]
+        coll = dict(base["coll"])
+        for i, r in enumerate(full_reps):
+            if r == 1:
+                continue
+            bump_reps = tuple(2 if j == i else 1 for j in range(len(ones)))
+            bump = _costs_of(_compile_step(unrolled(with_reps(cfg, bump_reps)),
+                                           arch, shape_name, mesh, dtype,
+                                           cost_mode=True))
+            flops += (r - 1) * max(0.0, bump["flops"] - base["flops"])
+            nbytes += (r - 1) * max(0.0, bump["bytes"] - base["bytes"])
+            for kind_, v in bump["coll"].items():
+                delta = max(0, v - base["coll"].get(kind_, 0))
+                coll[kind_] = coll.get(kind_, 0) + (r - 1) * delta
+    else:
+        c = _costs_of(compiled)
+        flops, nbytes, coll = c["flops"], c["bytes"], c["coll"]
+
+    n_dev = 512 if multi_pod else 256
+    # Analytic per-device activation peak under per-block remat: the
+    # residual stream checkpoint per layer + one block's live set.  The
+    # XLA-CPU ``temp_size_in_bytes`` is a no-cross-segment-reuse upper
+    # bound (the CPU backend does not reuse buffers across block-backward
+    # segments — verified empirically; the TPU allocator does), so HBM
+    # fit is judged by args + this estimate (see EXPERIMENTS.md §Dry-run).
+    dp = n_dev // 16  # data(-pod) shards
+    tp = 16
+    if kind == "train":
+        toks_dev = (batch // dp) * seq // ACCUM.get(arch, 1)
+        resid = cfg.n_layers * toks_dev * cfg.d_model * 2  # bf16 checkpoints
+        block_live = 6 * toks_dev * cfg.d_model * 4 // tp  # one block bwd (fp32)
+        act_peak = resid + block_live
+    elif kind == "prefill":
+        toks_dev = (batch // dp) * seq
+        act_peak = 4 * toks_dev * cfg.d_model * 2 // max(tp // 4, 1)
+    else:
+        act_peak = 0  # decode: state-dominated (counted in args)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "compile_s": round(t_compile, 1),
+        "flops": flops,
+        "bytes_accessed": nbytes,
+        "collective_bytes": coll,
+        "collective_total": int(sum(coll.values())),
+        "n_devices": n_dev,
+        "act_peak_est": int(act_peak),
+        "cost_mode": "scanned" if multi_pod else "extrapolated",
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            result[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if verbose:
+        print(json.dumps(result, indent=None))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every (arch × shape) cell")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ALIASES:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp))
+            except Exception as e:  # a failing cell is a bug — record it
+                results.append({
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "FAILED", "error": f"{type(e).__name__}: {e}"[:500],
+                })
+                print(f"FAILED {arch} {shape} mp={mp}: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_fail = sum(1 for r in results if r["status"] == "FAILED")
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED / {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run launcher must set XLA_FLAGS before any jax initialization.
+
+Topology (TPU v5e):
+* single pod: (data=16, model=16) — 256 chips;
+* multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
+  pure data parallelism whose gradient all-reduce crosses the
+  data-center interconnect (the only cross-pod collective in training;
+  serving never crosses pods).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,247 @@
+"""Sharding rules: params / optimizer / batch / decode state → PartitionSpec.
+
+Strategy (DESIGN.md §5): tensor parallelism on the ``model`` axis, batch
+over (``pod``, ``data``).  Rules are path+shape based and *divisibility-
+guarded*: a dim is only sharded when divisible by the axis size, else the
+leaf falls back to replication (e.g. chatglm's 2 KV heads, gemma3's 8 Q
+heads stay replicated on a 16-wide model axis — GSPMD then propagates
+whatever is cheapest for the activations).  MoE expert banks shard their
+expert dim (expert parallelism reuses the model axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# path keywords → preferred dim to shard on the model axis
+# (dim index from the END, so stacked leading repeat dims don't matter)
+_COL = {"wi_gate", "wi_up", "wi", "lm_head", "qa", "oa"}
+_ROW = {"wkv_b", "qb", "ob"}
+# attention projections: shard ONLY when heads divide the axis — a packed
+# (d, H·D) output dim sharded across part of a head misaligns the
+# (B,S,H,D) reshape and GSPMD resolves it with "involuntary full
+# rematerialization" (measured: ~20× collective blow-up, 5-10× compile
+# time).  Head-aligned or replicated, nothing in between.
+_ATTN_Q = {"wq"}
+_ATTN_KV = {"wk", "wv"}
+_ATTN_O = {"wo"}
+_EXPERT = {"wi_gate", "wi_up", "wo"}  # under a "moe" parent
+# SSM/recurrent mixers keep heterogeneously-packed projections
+# (in_proj = [z|x|B|C|dt], per-head recurrences with few heads) →
+# replicate; the SSM archs are ≤2.7B so replicated weights fit HBM.
+_REPLICATE = {"norm", "norm1", "norm2", "kv_norm", "final_norm", "conv_w",
+              "conv_b", "dt_bias", "A_log", "D", "b_i", "b_f", "b_z", "b_o",
+              "router", "scale", "bias", "in_proj", "out_proj", "up_proj",
+              "down_proj", "w_i", "w_f", "w_z", "w_o", "r_i", "r_f", "r_z",
+              "r_o", "out", "patch_proj"}
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def param_spec(path, leaf, model_axis: str, axis_size: int,
+               q_align: bool = True, kv_align: bool = True) -> P:
+    names = _path_names(path)
+    nameset = set(names)
+    shape = leaf.shape
+    nd = leaf.ndim
+
+    def ok(dim_from_end: int) -> bool:
+        return nd > dim_from_end and shape[nd - 1 - dim_from_end] % axis_size == 0
+
+    def spec(dim_from_end: int) -> P:
+        parts = [None] * nd
+        parts[nd - 1 - dim_from_end] = model_axis
+        return P(*parts)
+
+    leafname = names[-2] if names[-1] in ("w", "b") else names[-1]
+    in_mixer = "mixer" in nameset  # mLSTM wq/wk/wv etc. → replicate
+
+    if leafname in _REPLICATE:
+        return P()
+    # MoE expert banks: (..., E, d, F) — shard experts (EP)
+    if "moe" in nameset and names[-1] in _EXPERT and nd >= 3:
+        if shape[nd - 3] % axis_size == 0:
+            parts = [None] * nd
+            parts[nd - 3] = model_axis
+            return P(*parts)
+        return spec(1) if ok(1) else P()
+    # embeddings: shard vocab (dim -2)
+    if "embed" in nameset and names[-1] == "table":
+        return spec(1) if ok(1) else P()
+    if names[-1] == "b":
+        if leafname in (_COL | _ATTN_Q | _ATTN_KV) and shape[-1] % axis_size == 0:
+            if leafname in _ATTN_Q and not q_align:
+                return P()
+            if leafname in _ATTN_KV and not kv_align:
+                return P()
+            if in_mixer:
+                return P()
+            return spec(0)
+        return P()
+    in_attn = "attn" in nameset and not in_mixer
+    if leafname in _ATTN_Q and in_attn:
+        return spec(0) if (q_align and ok(0)) else P()
+    if leafname in _ATTN_KV and in_attn:
+        return spec(0) if (kv_align and ok(0)) else P()
+    if leafname in _ATTN_O and in_attn:
+        # row-shard over the H·D contraction dim — only if q heads align
+        return spec(1) if (q_align and ok(1)) else P()
+    if leafname in _COL:
+        return spec(0) if ok(0) else P()
+    if leafname in _ROW or (leafname in _ATTN_O and not in_attn):
+        # ffn down-projection: row-shard the d_ff contraction dim
+        return spec(1) if ok(1) else (spec(0) if ok(0) else P())
+    return P()
+
+
+def attn_alignment(cfg, axis_size: int) -> Tuple[bool, bool]:
+    """(q_align, kv_align): do the arch's attention head counts divide
+    the model axis?  (All attn layers in our archs share head counts.)"""
+    for s in cfg.all_specs():
+        if s.kind == "attn":
+            a = s.attn
+            if a.is_mla:
+                return (a.n_heads % axis_size == 0,) * 2
+            return (a.n_heads % axis_size == 0, a.n_kv_heads % axis_size == 0)
+    return (False, False)
+
+
+def shard_params(params: Any, mesh: Mesh, model_axis: str = "model",
+                 cfg: Optional[Any] = None) -> Any:
+    axis_size = mesh.shape[model_axis]
+    q_align, kv_align = attn_alignment(cfg, axis_size) if cfg is not None else (True, True)
+
+    def f(path, leaf):
+        return NamedSharding(
+            mesh,
+            param_spec(path, leaf, model_axis, axis_size,
+                       q_align=q_align, kv_align=kv_align),
+        )
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def shard_opt_state(opt_state: Any, params_sharding: Any, mesh: Mesh) -> Any:
+    """Moments/master mirror the parameter shardings; scalars replicate."""
+    rep = NamedSharding(mesh, P())
+    mirror = lambda tree: jax.tree_util.tree_map(
+        lambda s, _x: s, params_sharding, tree
+    )
+    m = mirror(opt_state.m)
+    v = mirror(opt_state.v)
+    master = mirror(opt_state.master) if opt_state.master is not None else None
+    return type(opt_state)(step=rep, m=m, v=v, master=master)
+
+
+def batch_spec(mesh: Mesh, shape, leading_stack: bool = False) -> P:
+    """Batch-dim sharding over (pod, data), guarded by divisibility
+    (long_500k's batch=1 falls back to replication).  ``leading_stack``
+    skips a leading non-batch dim (e.g. mrope positions (3, B, S))."""
+    ax = batch_axes(mesh)
+    nb = 1
+    for a in ax:
+        nb *= mesh.shape[a]
+    ndim = len(shape)
+    parts = [None] * ndim
+    bdim = 1 if leading_stack else 0
+    if ndim > bdim and shape[bdim] % nb == 0:
+        parts[bdim] = ax if len(ax) > 1 else ax[0]
+    return P(*parts)
+
+
+def shard_batch(mesh: Mesh, batch: Any) -> Any:
+    def f(path, leaf):
+        names = _path_names(path)
+        lead = names[-1] == "positions" and leaf.ndim == 3
+        return NamedSharding(mesh, batch_spec(mesh, leaf.shape, leading_stack=lead))
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def zero1_shardings(params_sharding: Any, shapes: Any, mesh: Mesh, axis: str = "data") -> Any:
+    """ZeRO-1: additionally shard optimizer-moment leaves over the data
+    axis (first divisible dim not already sharded).  Cuts the fp32
+    master+m+v residency by the DP degree — required for the 14B-class
+    archs to fit v5e HBM (see EXPERIMENTS.md §Dry-run).
+
+    ``shapes`` is the matching pytree of ShapeDtypeStructs (divisibility
+    guard); small leaves (< 65536 elems) stay as-is."""
+    n = mesh.shape[axis]
+
+    def f(s, shp):
+        shape = shp.shape
+        size = 1
+        for d_ in shape:
+            size *= int(d_)
+        if size < 65536:
+            return s
+        spec = list(s.spec) + [None] * (len(shape) - len(s.spec))
+        for d in range(len(shape)):
+            if spec[d] is None and shape[d] % n == 0:
+                spec[d] = axis
+                return NamedSharding(mesh, P(*spec))
+        return s
+
+    return jax.tree_util.tree_map(f, params_sharding, shapes)
+
+
+def shard_decode_state(states: Any, mesh: Mesh, model_axis: str = "model") -> Any:
+    """KV caches: batch on (pod,data); kv-head dim on model when
+    divisible, else the **sequence dim** of the cache (flash-decoding-
+    style KV sequence sharding — how the few-KV-head archs fit 32k-500k
+    caches in HBM; the softmax then reduces over the sharded dim via
+    GSPMD collectives).
+
+    Cache layouts (stacked over repeats): k/v (R, B, T, Hkv, D);
+    MLA ckv/krope (R, B, T, r); SSM states (R, B, H, ...).  Batch = dim 1.
+    """
+    axis_size = mesh.shape[model_axis]
+    ax = batch_axes(mesh)
+    nb = 1
+    for a in ax:
+        nb *= mesh.shape[a]
+    bspec = ax if len(ax) > 1 else ax[0]
+
+    def f(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        parts = [None] * nd
+        if nd >= 2 and leaf.shape[1] % nb == 0:
+            parts[1] = bspec  # batch dim (after the stacked-repeat dim)
+        name = names[-1]
+        if name in ("k", "v") and nd == 5:
+            if leaf.shape[3] % axis_size == 0:
+                parts[3] = model_axis  # kv heads
+            elif leaf.shape[2] % axis_size == 0:
+                parts[2] = model_axis  # cache sequence dim
+        elif name in ("ckv", "krope") and nd == 4:
+            if leaf.shape[2] % axis_size == 0:
+                parts[2] = model_axis  # MLA latent cache sequence dim
+        elif name == "kv" and nd == 5:
+            if leaf.shape[2] % axis_size == 0:
+                parts[2] = model_axis  # mLSTM heads (R,B,H,Dk,Dv)
+            elif leaf.shape[4] % axis_size == 0:
+                parts[4] = model_axis  # mLSTM value dim
+        elif name == "ssm" and nd == 5 and leaf.shape[2] % axis_size == 0:
+            parts[2] = model_axis  # mamba2 heads (R,B,H,P,N)
+        elif name == "conv" and nd == 4 and leaf.shape[3] % axis_size == 0:
+            parts[3] = model_axis  # mamba2 conv channels
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(f, states)

@@ -1,0 +1,398 @@
+"""Attention mixers: GQA (+ sliding window) and MLA (DeepSeek-V2).
+
+Two execution paths per mixer:
+
+* **fwd** — full-sequence causal attention for training / prefill.  The
+  default implementation is blockwise online-softmax over KV chunks
+  (``chunked_attention``) so 32k-sequence prefill never materializes the
+  (S × S) score matrix; on TPU the Pallas flash kernel
+  (``repro.kernels.flash_attention``) replaces it 1:1.
+* **decode** — single-token step against a dense KV cache
+  ``(B, S_max, H_kv, D)``.  The serving engine uses the paged variant in
+  ``repro.kernels.paged_attention`` over the TPP-tiered page pool instead.
+
+MLA follows DeepSeek-V2-Lite: no q compression, ``kv_lora_rank=512``,
+``qk_nope=128``, ``qk_rope=64``, ``v_head=128``.  The decode path uses the
+weight-absorption trick so the per-token cache is just the 576-wide
+``(c_kv, k_rope)`` latent — the paper-relevant property (tiny KV pages).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.rope import (
+    apply_rope,
+    apply_rope_partial,
+    mrope_cos_sin,
+    rope_cos_sin,
+    text_mrope_positions,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope: str = "rope"  # rope | rope2d | mrope | none
+    rope_base: float = 10000.0
+    rotary_dim: Optional[int] = None  # for rope2d (defaults head_dim//2)
+    window: Optional[int] = None  # sliding-window size (None = full)
+    qkv_bias: bool = False
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    # MLA (None fields → GQA)
+    kv_lora_rank: Optional[int] = None
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank is not None
+
+    @property
+    def kv_cache_width(self) -> int:
+        """Per-token KV cache width in elements (drives page sizing)."""
+        if self.is_mla:
+            return self.kv_lora_rank + self.qk_rope_dim
+        return 2 * self.n_kv_heads * self.head_dim
+
+
+# ===================================================================== #
+# shared: positions → cos/sin
+# ===================================================================== #
+def make_cos_sin(cfg: AttnConfig, positions: jax.Array):
+    """positions: (B, S) int32, or (3, B, S) for mrope."""
+    if cfg.rope == "none":
+        return None, None
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:  # text-only: t=h=w
+            positions = text_mrope_positions(positions)
+        return mrope_cos_sin(positions, cfg.head_dim, cfg.mrope_sections, cfg.rope_base)
+    if cfg.rope == "rope2d":
+        rd = cfg.rotary_dim or cfg.head_dim // 2
+        return rope_cos_sin(positions, rd, cfg.rope_base)
+    dim = cfg.qk_rope_dim if cfg.is_mla else cfg.head_dim
+    return rope_cos_sin(positions, dim, cfg.rope_base)
+
+
+def _rotate(cfg: AttnConfig, x: jax.Array, cos, sin) -> jax.Array:
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "rope2d":
+        rd = cfg.rotary_dim or cfg.head_dim // 2
+        return apply_rope_partial(x, cos, sin, rd)
+    return apply_rope(x, cos, sin)
+
+
+# ===================================================================== #
+# chunked online-softmax attention (the jnp "flash" path)
+# ===================================================================== #
+# module-level default so the §Perf driver can sweep it (re-lowering
+# picks the new value up; see EXPERIMENTS.md §Perf)
+DEFAULT_KV_CHUNK = 1024
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, S, H, D) — queries (already rotated)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,  # absolute position of q[0] (prefill chunks)
+    scale: Optional[float] = None,
+    kv_chunk: Optional[int] = None,
+) -> jax.Array:
+    """Blockwise attention with running softmax (never builds S×T scores).
+
+    GQA is handled by folding the group dim into the batch of einsums —
+    KV is never materialized per-query-head.
+    """
+    B, S, H, D = q.shape
+    T, Hkv, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S, Hkv, G, D) * jnp.asarray(scale, q.dtype)
+
+    kv_chunk = kv_chunk or min(DEFAULT_KV_CHUNK, max(T, 16))
+    nchunks = -(-T // kv_chunk)
+    Tpad = nchunks * kv_chunk
+    if Tpad != T:
+        k = jnp.pad(k, ((0, 0), (0, Tpad - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tpad - T), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, kv_chunk, Hkv, D)
+    vc = v.reshape(B, nchunks, kv_chunk, Hkv, Dv)
+
+    q_pos = q_offset + jnp.arange(S)  # (S,)
+
+    def step(carry, inp):
+        m, l, acc = carry  # (B,S,Hkv,G), (B,S,Hkv,G), (B,S,Hkv,G,Dv)
+        kb, vb, c_idx = inp  # (B,C,Hkv,D), (B,C,Hkv,Dv), scalar
+        k_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)  # (C,)
+        s = jnp.einsum("bshgd,bchd->bshgc", qg, kb)  # (B,S,Hkv,G,C)
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+        else:
+            mask = jnp.ones((S, kv_chunk), dtype=bool)
+        if window is not None:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        mask &= (k_pos < T)[None, :]  # padding
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) → nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p.astype(vb.dtype), vb
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hkv, G), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), dtype=jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, G, Dv), dtype=jnp.float32)
+    kc32 = jnp.moveaxis(kc, 1, 0)  # (n, B, C, Hkv, D)
+    vc32 = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc32, vc32, jnp.arange(nchunks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+def reference_attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, scale=None
+) -> jax.Array:
+    """Naive full-score attention (oracle for tests; fine for short S)."""
+    B, S, H, D = q.shape
+    T, Hkv, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bshgd,bthd->bshgt", qg, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+# ===================================================================== #
+# GQA
+# ===================================================================== #
+def init_gqa(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 4)
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": nn.dense_init(ks[0], d, H * D, dtype=dtype, bias=cfg.qkv_bias),
+        "wk": nn.dense_init(ks[1], d, Hkv * D, dtype=dtype, bias=cfg.qkv_bias),
+        "wv": nn.dense_init(ks[2], d, Hkv * D, dtype=dtype, bias=cfg.qkv_bias),
+        "wo": nn.dense_init(ks[3], H * D, d, dtype=dtype),
+    }
+
+
+def gqa_fwd(
+    p: Params,
+    cfg: AttnConfig,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S) or (3, B, S)
+    impl: str = "chunked",
+) -> jax.Array:
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = nn.dense(p["wq"], x).reshape(B, S, H, D)
+    k = nn.dense(p["wk"], x).reshape(B, S, Hkv, D)
+    v = nn.dense(p["wv"], x).reshape(B, S, Hkv, D)
+    cos, sin = make_cos_sin(cfg, positions)
+    if cos is not None:
+        q = _rotate(cfg, q, cos, sin)
+        k = _rotate(cfg, k, cos, sin)
+    fn = chunked_attention if impl == "chunked" else reference_attention
+    o = fn(q, k, v, causal=True, window=cfg.window)
+    return nn.dense(p["wo"], o.reshape(B, S, H * D))
+
+
+def gqa_decode(
+    p: Params,
+    cfg: AttnConfig,
+    x: jax.Array,  # (B, 1, d)
+    k_cache: jax.Array,  # (B, S_cache, Hkv, D)
+    v_cache: jax.Array,
+    cur_len: jax.Array,  # (B,) or scalar int32 — tokens already cached
+    positions: jax.Array,  # (B, 1) or (3, B, 1)
+    rolling: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a dense KV cache. Returns (y, k', v').
+
+    ``rolling=True`` treats the cache as a circular buffer of size
+    ``window`` (sliding-window layers cap their cache: slot = pos % W).
+    Keys are stored post-RoPE, so slot order never matters for scores.
+    """
+    B, _, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S_cache = k_cache.shape[1]
+    q = nn.dense(p["wq"], x).reshape(B, 1, H, D)
+    k = nn.dense(p["wk"], x).reshape(B, 1, Hkv, D)
+    v = nn.dense(p["wv"], x).reshape(B, 1, Hkv, D)
+    cos, sin = make_cos_sin(cfg, positions)
+    if cos is not None:
+        q = _rotate(cfg, q, cos, sin)
+        k = _rotate(cfg, k, cos, sin)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    # write new kv (rolling: wrap around the window) — scatter, NOT a
+    # full-cache jnp.where rewrite: the where form reads+writes the whole
+    # cache every token (≫ the attention read itself); the scatter touches
+    # one slot per sequence (§Perf iteration A, EXPERIMENTS.md)
+    slot = jnp.remainder(cur, S_cache) if rolling else cur
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+
+    # scores over the cache with validity mask
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D) * (1.0 / math.sqrt(D))
+    s = jnp.einsum("bhgd,bthd->bhgt", qg.astype(jnp.float32), k_cache.astype(jnp.float32))
+    t_pos = jnp.arange(S_cache)[None, :]
+    if rolling:
+        # buffer holds exactly the last min(cur+1, S_cache) tokens
+        valid = t_pos < jnp.minimum(cur[:, None] + 1, S_cache)
+    else:
+        valid = t_pos <= cur[:, None]
+        if cfg.window is not None:
+            valid &= t_pos > (cur[:, None] - cfg.window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", pr, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, H * D).astype(x.dtype)
+    return nn.dense(p["wo"], o), k_cache, v_cache
+
+
+# ===================================================================== #
+# MLA (DeepSeek-V2)
+# ===================================================================== #
+def init_mla(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 5)
+    d, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": nn.dense_init(ks[0], d, H * (dn + dr), dtype=dtype),
+        "wkv_a": nn.dense_init(ks[1], d, r + dr, dtype=dtype),
+        "kv_norm": nn.rmsnorm_init(r, dtype=dtype),
+        "wkv_b": nn.dense_init(ks[2], r, H * (dn + dv), dtype=dtype),
+        "wo": nn.dense_init(ks[3], H * dv, d, dtype=dtype),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions):
+    """Shared projection path → q_nope, q_rope, c_kv, k_rope (rotated)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    r, dn, dr = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = nn.dense(p["wq"], x).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = nn.dense(p["wkv_a"], x)  # (B,S,r+dr)
+    c_kv = nn.rmsnorm(p["kv_norm"], kv_a[..., :r])
+    k_rope = kv_a[..., r:][:, :, None, :]  # (B,S,1,dr) shared across heads
+    cos, sin = rope_cos_sin(positions, dr, cfg.rope_base)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(p: Params, cfg: AttnConfig, x, positions, impl="chunked") -> jax.Array:
+    """Training/prefill MLA: expand the latent and run standard attention."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dv, dr = cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    kv = nn.dense(p["wkv_b"], c_kv).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    fn = chunked_attention if impl == "chunked" else reference_attention
+    o = fn(q, k, v, causal=True, scale=1.0 / math.sqrt(dn + dr))
+    return nn.dense(p["wo"], o.reshape(B, S, H * dv))
+
+
+def mla_decode(
+    p: Params,
+    cfg: AttnConfig,
+    x: jax.Array,  # (B, 1, d)
+    ckv_cache: jax.Array,  # (B, S_max, r) — the 512-wide latent cache
+    krope_cache: jax.Array,  # (B, S_max, dr)
+    cur_len: jax.Array,
+    positions: jax.Array,  # (B, 1)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed decode: attention runs in the latent space.
+
+    scores = (q_nope · W_kvb^K) · c_kv + q_rope · k_rope
+    out    = W_o · (W_kvb^V · Σ p·c_kv)
+
+    The KV cache is (c_kv, k_rope): 512+64=576 elems/token — ~9× smaller
+    than GQA at equal heads, which is why MLA pages tier so cheaply.
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    S_max = ckv_cache.shape[1]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, cfg, x, positions)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+
+    # update latent caches at cur (scatter — see gqa_decode note)
+    bidx = jnp.arange(B)
+    ckv_cache = ckv_cache.at[bidx, cur].set(c_kv_new[:, 0].astype(ckv_cache.dtype))
+    krope_cache = krope_cache.at[bidx, cur].set(
+        k_rope_new[:, 0, 0, :].astype(krope_cache.dtype)
+    )
+
+    # absorb W_kvb^K into q:  q_lat (B,H,r)
+    wkb = p["wkv_b"]["w"].reshape(r, H, dn + dv)
+    w_k = wkb[..., :dn]  # (r, H, dn)
+    w_v = wkb[..., dn:]  # (r, H, dv)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), w_k.astype(jnp.float32))
+    s_lat = jnp.einsum("bhr,btr->bht", q_lat, ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum(
+        "bhd,btd->bht", q_rope[:, 0].astype(jnp.float32), krope_cache.astype(jnp.float32)
+    )
+    s = (s_lat + s_rope) / math.sqrt(dn + dr)
+    valid = jnp.arange(S_max)[None, :] <= cur[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", pr, ckv_cache.astype(jnp.float32))  # (B,H,r)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_v.astype(jnp.float32))  # (B,H,dv)
+    o = o.reshape(B, 1, H * dv).astype(x.dtype)
+    return nn.dense(p["wo"], o), ckv_cache, krope_cache
+
+
+# ===================================================================== #
+# dispatch
+# ===================================================================== #
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    return init_mla(key, cfg, dtype) if cfg.is_mla else init_gqa(key, cfg, dtype)
+
+
+def attention_fwd(p, cfg: AttnConfig, x, positions, impl="chunked"):
+    if cfg.is_mla:
+        return mla_fwd(p, cfg, x, positions, impl=impl)
+    return gqa_fwd(p, cfg, x, positions, impl=impl)

@@ -1,0 +1,42 @@
+"""Feed-forward mixers: SwiGLU / GeGLU / plain-GELU MLP.
+
+Param pytrees hold arrays only; the ``kind`` is static configuration.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+Params = Dict[str, Any]
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str = "swiglu", dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": nn.dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "wi_up": nn.dense_init(ks[1], d_model, d_ff, dtype=dtype),
+            "wo": nn.dense_init(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    if kind == "gelu":
+        return {
+            "wi": nn.dense_init(ks[0], d_model, d_ff, dtype=dtype, bias=True),
+            "wo": nn.dense_init(ks[1], d_ff, d_model, dtype=dtype, bias=True),
+        }
+    raise ValueError(f"unknown ffn kind {kind!r}")
+
+
+def ffn_fwd(p: Params, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        return nn.dense(p["wo"], jax.nn.silu(nn.dense(p["wi_gate"], x)) * nn.dense(p["wi_up"], x))
+    if kind == "geglu":
+        return nn.dense(
+            p["wo"],
+            jax.nn.gelu(nn.dense(p["wi_gate"], x), approximate=True) * nn.dense(p["wi_up"], x),
+        )
+    return nn.dense(p["wo"], jax.nn.gelu(nn.dense(p["wi"], x), approximate=True))

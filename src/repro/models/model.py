@@ -1,0 +1,300 @@
+"""Top-level model: embeddings → pattern stack → head, plus train loss
+and decode steps.  One :class:`ModelConfig` describes every assigned
+architecture (see ``repro.configs``)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.transformer import (
+    BlockSpec,
+    init_stack,
+    init_stack_state,
+    stack_decode,
+    stack_fwd,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | ssm | hybrid | moe | audio | vlm
+    d_model: int
+    vocab: int
+    # sequential stacks: ((pattern, n_repeats), ...) — total layers is the
+    # sum of len(pattern) * n_repeats.  Multiple stacks cover layer counts
+    # that are not a multiple of the pattern period (e.g. gemma3's 34).
+    stacks: Tuple[Tuple[Tuple[BlockSpec, ...], int], ...]
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # musicgen: number of EnCodec codebooks (tokens are (B, S, K))
+    n_codebooks: int = 1
+    # vlm stub: patch embeddings replace the first n positions
+    vision_stub: bool = False
+    mrope: bool = False
+    # long_500k eligibility (sub-quadratic serving memory)
+    subquadratic: bool = False
+    # training knobs
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 0.01
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(pat) * reps for pat, reps in self.stacks)
+
+    def all_specs(self) -> List[BlockSpec]:
+        out: List[BlockSpec] = []
+        for pat, reps in self.stacks:
+            out.extend(list(pat) * reps)
+        return out
+
+    def max_window(self) -> Optional[int]:
+        """Largest attention window (None if any attn layer is full-range)."""
+        ws = []
+        for s in self.all_specs():
+            if s.kind == "attn":
+                if s.attn.window is None:
+                    return None
+                ws.append(s.attn.window)
+        return max(ws) if ws else 0
+
+
+# ===================================================================== #
+# init
+# ===================================================================== #
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 4)
+    K = cfg.n_codebooks
+    p: Params = {
+        "embed": nn.embedding_init(ks[0], cfg.vocab * K, cfg.d_model, dtype=dtype),
+        "stacks": [
+            init_stack(k, pat, reps, cfg.d_model, dtype)
+            for k, (pat, reps) in zip(
+                nn.split_keys(ks[1], len(cfg.stacks)), cfg.stacks
+            )
+        ],
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.dense_init(
+            ks[2], cfg.d_model, cfg.vocab * K, dtype=dtype, std=0.02
+        )
+    if cfg.vision_stub:
+        # stub frontend: a single projection from precomputed patch embeds
+        p["patch_proj"] = nn.dense_init(ks[3], cfg.d_model, cfg.d_model, dtype=dtype)
+    return p
+
+
+# ===================================================================== #
+# shared: embed / unembed
+# ===================================================================== #
+def _embed_tokens(p: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    if cfg.n_codebooks > 1:
+        # tokens (B, S, K): sum of per-codebook embeddings (MusicGen)
+        offs = jnp.arange(cfg.n_codebooks, dtype=tokens.dtype) * cfg.vocab
+        x = nn.embed(p["embed"], tokens + offs[None, None, :])
+        return x.sum(axis=2)
+    return nn.embed(p["embed"], tokens)
+
+
+def _logits(p: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        out = h @ p["embed"]["table"].T.astype(h.dtype)
+    else:
+        out = nn.dense(p["lm_head"], h)
+    if cfg.n_codebooks > 1:
+        out = out.reshape(out.shape[:-1] + (cfg.n_codebooks, cfg.vocab))
+    return out
+
+
+# ===================================================================== #
+# forward / loss
+# ===================================================================== #
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) or (B, S, K)
+    positions: Optional[jax.Array] = None,  # (B, S) or (3, B, S) for mrope
+    patch_embeds: Optional[jax.Array] = None,  # (B, Np, d) vlm stub
+    impl: str = "chunked",
+    remat: bool = False,
+    remat_policy=None,
+    last_only: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits, aux_loss).
+
+    ``last_only=True`` unembeds only the final position (the production
+    prefill step: next-token logits + KV, never the (B,S,V) tensor)."""
+    B, S = tokens.shape[:2]
+    x = _embed_tokens(p, cfg, tokens)
+    if cfg.vision_stub and patch_embeds is not None:
+        Np = patch_embeds.shape[1]
+        patches = nn.dense(p["patch_proj"], patch_embeds.astype(x.dtype))
+        x = jnp.concatenate([patches, x[:, Np:]], axis=1)
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        positions = jnp.stack([pos1] * 3) if cfg.mrope else pos1
+    h = x
+    aux = jnp.zeros((), jnp.float32)
+    for sp, (pat, reps) in zip(p["stacks"], cfg.stacks):
+        h, a = stack_fwd(sp, pat, reps, h, positions, impl=impl, remat=remat,
+                         remat_policy=remat_policy)
+        aux = aux + a
+    h = nn.rmsnorm(p["final_norm"], h)
+    if last_only:
+        h = h[:, -1:]
+    return _logits(p, cfg, h), aux
+
+
+def _ce_terms(logits_f32, labels, onehot: bool = False):
+    """Per-token (nll, lse) for one chunk.
+
+    ``onehot=True`` extracts the label logit via a one-hot contraction
+    instead of ``take_along_axis``: on a vocab-sharded mesh the gather
+    forces GSPMD to all-gather the fp32 logits across the model axis,
+    while the contraction reduces over the sharded vocab dim locally and
+    psums a (B, S) scalar field — the §Perf collective-term fix.
+    """
+    lse = jax.nn.logsumexp(logits_f32, axis=-1)
+    if onehot:
+        oh = jax.nn.one_hot(labels, logits_f32.shape[-1], dtype=logits_f32.dtype)
+        ll = jnp.einsum("...v,...v->...", oh, logits_f32)
+    else:
+        ll = jnp.take_along_axis(logits_f32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    return nll, lse
+
+
+def loss_fn(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    impl: str = "chunked",
+    remat: bool = False,
+    remat_policy=None,
+    ce_chunk: int = 0,
+    ce_onehot: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal LM loss: cross-entropy + z-loss + MoE aux.
+
+    ``ce_chunk > 0`` streams the unembedding + cross-entropy over
+    sequence chunks so the (B, S, V) fp32 logits tensor is never
+    materialized — the memory-side optimization for large-vocab archs
+    (gemma3 262k, qwen2 152k); see EXPERIMENTS.md §Perf.
+    """
+    if ce_chunk:
+        # hidden states once; unembed chunk-by-chunk via scan
+        B, S = batch["tokens"].shape[:2]
+        x = _embed_tokens(p, cfg, batch["tokens"])
+        if cfg.vision_stub and batch.get("patch_embeds") is not None:
+            Np = batch["patch_embeds"].shape[1]
+            patches = nn.dense(p["patch_proj"], batch["patch_embeds"].astype(x.dtype))
+            x = jnp.concatenate([patches, x[:, Np:]], axis=1)
+        positions = batch.get("positions")
+        if positions is None:
+            pos1 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            positions = jnp.stack([pos1] * 3) if cfg.mrope else pos1
+        h = x
+        aux = jnp.zeros((), jnp.float32)
+        from repro.models.transformer import stack_fwd as _sf
+
+        for sp, (pat, reps) in zip(p["stacks"], cfg.stacks):
+            h, a = _sf(sp, pat, reps, h, positions, impl=impl, remat=remat,
+                       remat_policy=remat_policy)
+            aux = aux + a
+        h = nn.rmsnorm(p["final_norm"], h)
+        nc = S // ce_chunk
+        hc = h.reshape(B, nc, ce_chunk, h.shape[-1])
+        lc = batch["labels"].reshape((B, nc, ce_chunk) + batch["labels"].shape[2:])
+
+        @jax.checkpoint
+        def body(carry, i):
+            nll_s, z_s = carry
+            logits = _logits(p, cfg, hc[:, i]).astype(jnp.float32)
+            nll, lse = _ce_terms(logits, lc[:, i], onehot=ce_onehot)
+            return (nll_s + nll.sum(), z_s + (lse**2).sum()), None
+
+        (nll_sum, z_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(nc),
+        )
+        denom = jnp.asarray(np_prod_shape(batch["labels"].shape), jnp.float32)
+        ce = nll_sum / denom
+        zl = cfg.z_loss * z_sum / denom
+        total = ce + zl + cfg.aux_loss_weight * aux
+        return total, {"ce": ce, "z_loss": zl, "aux": aux}
+
+    logits, aux = forward(
+        p,
+        cfg,
+        batch["tokens"],
+        positions=batch.get("positions"),
+        patch_embeds=batch.get("patch_embeds"),
+        impl=impl,
+        remat=remat,
+        remat_policy=remat_policy,
+    )
+    labels = batch["labels"]  # (B, S) or (B, S, K)
+    logits = logits.astype(jnp.float32)
+    nll, lse = _ce_terms(logits, labels, onehot=ce_onehot)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(nll.shape, jnp.float32)
+    else:
+        mask = jnp.broadcast_to(
+            mask.reshape(mask.shape + (1,) * (nll.ndim - mask.ndim)), nll.shape
+        ).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    zl = cfg.z_loss * ((lse**2) * mask).sum() / denom
+    total = ce + zl + cfg.aux_loss_weight * aux
+    return total, {"ce": ce, "z_loss": zl, "aux": aux}
+
+
+def np_prod_shape(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# ===================================================================== #
+# decode
+# ===================================================================== #
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32
+) -> List[List[Params]]:
+    return [
+        init_stack_state(pat, reps, batch, max_len, dtype)
+        for pat, reps in cfg.stacks
+    ]
+
+
+def decode_step(
+    p: Params,
+    cfg: ModelConfig,
+    tokens_t: jax.Array,  # (B, 1) or (B, 1, K)
+    states: List[Params],
+    cur_len: jax.Array,  # (B,) tokens already in the caches
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, List[Params]]:
+    """One autoregressive step → (logits (B, 1, vocab[, K]), new states)."""
+    B = tokens_t.shape[0]
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(B, 1), (B, 1))
+        positions = jnp.stack([pos1] * 3) if cfg.mrope else pos1
+    x = _embed_tokens(p, cfg, tokens_t)
+    h = x
+    new_states = []
+    for sp, (pat, reps), st in zip(p["stacks"], cfg.stacks, states):
+        h, ns = stack_decode(sp, pat, reps, h, st, cur_len, positions)
+        new_states.append(ns)
+    h = nn.rmsnorm(p["final_norm"], h)
+    return _logits(p, cfg, h), new_states

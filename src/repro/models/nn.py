@@ -1,0 +1,116 @@
+"""Minimal pure-JAX NN substrate (no flax/optax in this environment).
+
+Parameters are plain nested dicts of ``jnp.ndarray`` (pytrees).  Every
+layer is a pair of functions: ``*_init(key, ...) -> params`` and a pure
+``apply``.  Compute dtype and parameter dtype are separated: params are
+stored in ``param_dtype`` and cast to ``dtype`` at use (bf16 compute /
+fp32 master weights is the production configuration).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# initializers
+# --------------------------------------------------------------------- #
+def normal_init(key: jax.Array, shape: Sequence[int], std: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def dense_init(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    *,
+    dtype=jnp.float32,
+    std: Optional[float] = None,
+    bias: bool = False,
+) -> Params:
+    """Linear layer params. Default init: truncated-normal fan-in."""
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p: Params = {"w": normal_init(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array, dtype=None) -> jax.Array:
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        b = p["b"].astype(y.dtype) if dtype is not None else p["b"]
+        y = y + b
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32, std: float = 0.02) -> Params:
+    return {"table": normal_init(key, (vocab, d), std, dtype)}
+
+
+def embed(p: Params, ids: jax.Array, dtype=None) -> jax.Array:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def rmsnorm_init(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# misc
+# --------------------------------------------------------------------- #
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

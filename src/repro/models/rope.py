@@ -1,0 +1,100 @@
+"""Rotary position embeddings: standard, partial/2d (ChatGLM), M-RoPE (Qwen2-VL).
+
+All variants share one primitive: rotate pairs ``(x0, x1) -> (x0·cos −
+x1·sin, x0·sin + x1·cos)`` with per-dimension frequencies ``θ_i =
+base^(−2i/d)``.  Differences are *which* dims rotate and *which* position
+index feeds each frequency group:
+
+* ``rope``        — full rotary over head_dim (llama/phi/gemma/musicgen).
+* ``rope_2d``     — ChatGLM-style: only the first half of head_dim is
+  rotary (the "2d" layout rotates half the dims with position, leaving
+  the rest untouched).
+* ``mrope``       — Qwen2-VL multimodal RoPE: head_dim frequency groups are
+  split into (temporal, height, width) sections, each section driven by
+  its own position id; text tokens carry t=h=w so M-RoPE degenerates to
+  standard RoPE for pure text.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, base: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for each rotating dim pair: (head_dim//2,)."""
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(
+    positions: jax.Array,  # (..., seq) int32
+    head_dim: int,
+    base: float = 10000.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables: (..., seq, head_dim//2) in fp32."""
+    inv = rope_freqs(head_dim, base)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jax.Array,  # (..., seq, heads, head_dim)
+    cos: jax.Array,  # (..., seq, head_dim//2)
+    sin: jax.Array,
+) -> jax.Array:
+    """Rotate interleaved-half layout: x = [x1 | x2], pairs (x1_i, x2_i)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the heads axis
+    c = cos[..., :, None, :].astype(x.dtype)
+    s = sin[..., :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def apply_rope_partial(
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    rotary_dim: int,
+) -> jax.Array:
+    """Rotate only the first ``rotary_dim`` dims (ChatGLM 2d-RoPE)."""
+    xr, xp = x[..., :rotary_dim], x[..., rotary_dim:]
+    half = rotary_dim // 2
+    return jnp.concatenate(
+        [apply_rope(xr, cos[..., :half], sin[..., :half]), xp], axis=-1
+    )
+
+
+# ------------------------------------------------------------------ #
+# M-RoPE (Qwen2-VL)
+# ------------------------------------------------------------------ #
+def mrope_cos_sin(
+    positions: jax.Array,  # (3, ..., seq) int32 — (t, h, w) ids
+    head_dim: int,
+    sections: Sequence[int] = (16, 24, 24),  # freq-group split, sums to half
+    base: float = 10000.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sectioned cos/sin: each frequency block uses its own position id.
+
+    ``sections`` follows Qwen2-VL's ``mrope_section`` (in units of
+    frequency pairs; sum == head_dim // 2).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, base)  # (half,)
+    # angles per axis: (3, ..., S, half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    # select the section owner for each frequency group: (half,) in {0,1,2}
+    owner = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half)
+    ang_sel = jnp.zeros(ang.shape[1:], dtype=ang.dtype)
+    for i in range(len(sections)):
+        ang_sel = jnp.where(owner == i, ang[i], ang_sel)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """For text-only streams t=h=w: stack to (3, ..., seq)."""
+    return jnp.stack([positions, positions, positions], axis=0)

@@ -1,0 +1,497 @@
+"""State-space / recurrent mixers: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+These are the attention-free architectures of the assignment
+(``xlstm-350m``, ``zamba2-2.7b``).  Each mixer has:
+
+* ``*_fwd``    — full-sequence training path.  Mamba2 uses the chunked
+  SSD ("state-space dual") algorithm — intra-chunk quadratic matmuls +
+  inter-chunk state recurrence — which maps onto the MXU as batched
+  matmuls of chunk size Q (hardware-aligned Q=128 by default).  mLSTM
+  uses the equivalent chunked gated-linear-attention form.  sLSTM is
+  inherently sequential → ``lax.scan`` over time.
+* ``*_decode`` — O(1) recurrent step against carried state (this is why
+  these archs run the ``long_500k`` shape: no KV cache at all; TPP's
+  page placement is *inapplicable* at serving time — see DESIGN.md
+  §Arch-applicability).
+
+All recurrences run in fp32 for stability regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+Params = Dict[str, Any]
+
+
+# ===================================================================== #
+# Mamba2 (SSD)
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        # conv runs over x and the (single-group) B, C streams
+        return self.d_inner + 2 * self.d_state
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 5)
+    d, di, ds, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj → [z (di), x (di), B (ds), C (ds), dt (H)]
+    d_in_proj = 2 * di + 2 * ds + H
+    return {
+        "in_proj": nn.dense_init(ks[0], d, d_in_proj, dtype=dtype),
+        "conv_w": nn.normal_init(ks[1], (cfg.d_conv, cfg.conv_dim), 0.1, dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, H))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "norm": nn.rmsnorm_init(di, dtype=dtype),
+        "out_proj": nn.dense_init(ks[2], di, d, dtype=dtype),
+    }
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Lower-triangular cumulative sums: out[..., i, j] = Σ_{k=j+1..i} a_k."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(
+    xh: jax.Array,  # (B, S, H, P) — inputs per head
+    dt: jax.Array,  # (B, S, H) — softplus'ed step sizes
+    A: jax.Array,  # (H,) — negative decay rates
+    Bm: jax.Array,  # (B, S, N) — input matrix (single group)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    ncnk = -(-S // Q)
+    pad = ncnk * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    # reshape into chunks
+    xc = xh.reshape(Bsz, ncnk, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, ncnk, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, ncnk, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, ncnk, Q, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]  # (B,n,Q,H) — log decay per step
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic, MXU) ----
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))  # (B,n,H,Q,Q)
+    scores = jnp.einsum("bnqm,bnpm->bnqp", Cc, Bc)  # (B,n,Q,Q) — CB^T
+    M = scores[:, :, None, :, :] * L  # (B,n,H,Q,Q)
+    xdt = xc * dtc[..., None]  # (B,n,Q,H,P)
+    y_diag = jnp.einsum("bnhqp,bnphd->bnqhd", M, xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,n,Q,H)
+    states = jnp.einsum(
+        "bnqm,bnqh,bnqhd->bnhdm", Bc, decay_to_end * dtc, xc
+    )  # (B,n,H,P,N)
+
+    # ---- inter-chunk recurrence over chunk index ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (B,n,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,n,H,P,N) state BEFORE chunk
+
+    # ---- off-diagonal contribution: C_t · decay · h_prev ----
+    decay_from_start = jnp.exp(dA_cum)  # (B,n,Q,H)
+    y_off = jnp.einsum(
+        "bnqm,bnqh,bnhdm->bnqhd", Cc, decay_from_start, h_prevs
+    )
+
+    y = (y_diag + y_off).reshape(Bsz, ncnk * Q, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba2_fwd(
+    p: Params, cfg: Mamba2Config, x: jax.Array
+) -> jax.Array:
+    """Training path: (B, S, d_model) → (B, S, d_model)."""
+    B, S, _ = x.shape
+    di, ds, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = nn.dense(p["in_proj"], x)
+    z, xs, Bm, Cm, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1)
+
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B,S,conv_dim)
+    w = p["conv_w"].astype(xbc.dtype)  # (K, conv_dim)
+    K = w.shape[0]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + S, :] * w[i][None, None, :] for i in range(K)
+    ) + p["conv_b"].astype(xbc.dtype)
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    xh = xs.reshape(B, S, H, P)
+    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = nn.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return nn.dense(p["out_proj"], y)
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+    }
+
+
+def mamba2_decode(
+    p: Params, cfg: Mamba2Config, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent step: x (B, 1, d_model)."""
+    B = x.shape[0]
+    di, ds, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = nn.dense(p["in_proj"], x[:, 0])
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1
+    )
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B, conv_dim)
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,K,cd)
+    w = p["conv_w"].astype(xbc.dtype)
+    conv = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(xbc.dtype)
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", Bm.astype(jnp.float32), dt, xh)
+    h = state["ssm"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = nn.rmsnorm(p["norm"], y * jax.nn.silu(z[:, None, :]))
+    out = nn.dense(p["out_proj"], y)
+    return out, {"ssm": h, "conv": hist[:, 1:, :]}
+
+
+# ===================================================================== #
+# mLSTM (xLSTM's matrix-memory cell, chunked gated linear attention)
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class MlstmConfig:
+    d_model: int
+    n_heads: int
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, cfg: MlstmConfig, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 7)
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "up_proj": nn.dense_init(ks[0], d, 2 * di, dtype=dtype),  # x and gate z
+        "wq": nn.dense_init(ks[1], di, di, dtype=dtype),
+        "wk": nn.dense_init(ks[2], di, di, dtype=dtype),
+        "wv": nn.dense_init(ks[3], di, di, dtype=dtype),
+        "w_i": nn.dense_init(ks[4], di, H, dtype=jnp.float32, std=0.02),  # input gate
+        "w_f": nn.dense_init(ks[5], di, H, dtype=jnp.float32, std=0.02),  # forget gate
+        "norm": nn.rmsnorm_init(di, dtype=dtype),
+        "down_proj": nn.dense_init(ks[6], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_chunked(
+    q, k, v,  # (B, S, H, D) fp32
+    log_f,  # (B, S, H) — log forget gate (≤0)
+    log_i,  # (B, S, H) — log input gate
+    chunk: int,
+):
+    """Chunked stabilized mLSTM — exact chunkwise form of the sequential
+    recurrence (running max-stabilizer ``m`` carried through the
+    inter-chunk scan; the ``max(|q·n|, 1)`` normalizer floor is applied in
+    true scale, matching ``mlstm_decode`` to fp32 tolerance — see tests).
+    """
+    B, S, H, D = q.shape
+    Q = chunk
+    ncnk = -(-S // Q)
+    pad = ncnk * Q - S
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (q, k, v))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+
+    qc = q.reshape(B, ncnk, Q, H, D)
+    kc = k.reshape(B, ncnk, Q, H, D)
+    vc = v.reshape(B, ncnk, Q, H, D)
+    fc = log_f.reshape(B, ncnk, Q, H)
+    ic = log_i.reshape(B, ncnk, Q, H)
+
+    f_cum = jnp.cumsum(fc, axis=2)  # within-chunk
+    f_total = f_cum[:, :, -1, :]  # (B,n,H)
+
+    # intra-chunk log-decay: dmat[q_, t] = f_cum[q_] - f_cum[t] + i[t]
+    lf = jnp.moveaxis(f_cum, 2, -1)  # (B,n,H,Q)
+    li = jnp.moveaxis(ic, 2, -1)
+    dmat = lf[..., :, None] - lf[..., None, :] + li[..., None, :]  # (B,n,H,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    dmat = jnp.where(tri, dmat, -jnp.inf)
+    m_intra = dmat.max(axis=-1)  # (B,n,H,Q)
+
+    # ---- chunk kv/n states with per-chunk local stabilizer mc ----
+    to_end = f_total[:, :, None, :] - f_cum + ic  # (B,n,Q,H)
+    mc = to_end.max(axis=2)  # (B,n,H)
+    w_state = jnp.exp(to_end - mc[:, :, None, :])
+    kv_state = jnp.einsum("bnqhd,bnqh,bnqhe->bnhde", kc, w_state, vc)
+    n_state = jnp.einsum("bnqhd,bnqh->bnhd", kc, w_state)
+
+    # ---- inter-chunk scan carrying (KVs, Ns, m): KV_true = KVs·exp(m) ----
+    def scan_fn(carry, inp):
+        Ckv, Cn, m = carry
+        kvs, ns, mloc, ftot = inp
+        out = (Ckv, Cn, m)  # state *before* this chunk
+        m_new = jnp.maximum(m + ftot, mloc)
+        a = jnp.exp(m + ftot - m_new)
+        b = jnp.exp(mloc - m_new)
+        Ckv = Ckv * a[..., None, None] + kvs * b[..., None, None]
+        Cn = Cn * a[..., None] + ns * b[..., None]
+        return (Ckv, Cn, m_new), out
+
+    init = (
+        jnp.zeros((B, H, D, D), jnp.float32),
+        jnp.zeros((B, H, D), jnp.float32),
+        jnp.full((B, H), -jnp.inf, jnp.float32),
+    )
+    _, (kv_prev, n_prev, m_prev) = jax.lax.scan(
+        scan_fn,
+        init,
+        (
+            jnp.moveaxis(kv_state, 1, 0),
+            jnp.moveaxis(n_state, 1, 0),
+            jnp.moveaxis(mc, 1, 0),
+            jnp.moveaxis(f_total, 1, 0),
+        ),
+    )
+    kv_prev = jnp.moveaxis(kv_prev, 0, 1)  # (B,n,H,D,D)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)  # (B,n,H,D)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)  # (B,n,H)
+
+    # ---- per-row stabilizer across intra + inter contributions ----
+    m_state_row = lf + m_prev[..., None]  # (B,n,H,Q): f_cum[q] + m_prev
+    m_row = jnp.maximum(m_intra, m_state_row)
+    m_row = jnp.where(jnp.isfinite(m_row), m_row, 0.0)
+    wmat = jnp.exp(dmat - m_row[..., None])  # (B,n,H,Q,Q)
+
+    scores = jnp.einsum("bnqhd,bnthd->bnhqt", qc, kc) / math.sqrt(D)
+    w = scores * wmat
+    y_intra = jnp.einsum("bnhqt,bnthd->bnqhd", w, vc)
+    norm_intra = jnp.einsum("bnhqt,bnth->bnhq", w, jnp.ones_like(fc))
+    norm_intra = jnp.moveaxis(norm_intra, -1, 2)  # (B,n,Q,H)
+
+    decay_q = jnp.exp(m_state_row - m_row)  # (B,n,H,Q)
+    y_inter = jnp.einsum("bnqhd,bnhq,bnhde->bnqhe", qc, decay_q, kv_prev) / math.sqrt(D)
+    norm_inter = jnp.moveaxis(
+        jnp.einsum("bnqhd,bnhq,bnhd->bnhq", qc, decay_q, n_prev), -1, 2
+    ) / math.sqrt(D)  # (B,n,Q,H)
+
+    num = y_intra + y_inter  # (B,n,Q,H,D)
+    den = norm_intra + norm_inter  # (B,n,Q,H)
+    # true-scale floor: max(|den·exp(m_row)|, 1) → max(|den|, exp(-m_row))
+    floor = jnp.exp(-jnp.moveaxis(m_row, -1, 2))
+    den = jnp.maximum(jnp.abs(den), floor)
+    y = num / den[..., None]
+    return y.reshape(B, ncnk * Q, H, D)[:, :S]
+
+
+def mlstm_fwd(p: Params, cfg: MlstmConfig, x: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    di, H, D = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    xz = nn.dense(p["up_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = nn.dense(p["wq"], xi).reshape(B, S, H, D).astype(jnp.float32)
+    k = nn.dense(p["wk"], xi).reshape(B, S, H, D).astype(jnp.float32)
+    v = nn.dense(p["wv"], xi).reshape(B, S, H, D).astype(jnp.float32)
+    log_i = nn.dense(p["w_i"], xi.astype(jnp.float32))  # pre-activation
+    log_f = jax.nn.log_sigmoid(nn.dense(p["w_f"], xi.astype(jnp.float32)))
+    y = _mlstm_chunked(q, k, v, log_f, log_i, cfg.chunk)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = nn.rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return nn.dense(p["down_proj"], y)
+
+
+def mlstm_init_state(cfg: MlstmConfig, batch: int):
+    H, D = cfg.n_heads, cfg.head_dim
+    return {
+        "kv": jnp.zeros((batch, H, D, D), jnp.float32),
+        "n": jnp.zeros((batch, H, D), jnp.float32),
+        "m": jnp.full((batch, H), -1e9, jnp.float32),
+    }
+
+
+def mlstm_decode(
+    p: Params, cfg: MlstmConfig, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Sequential stabilized mLSTM step (exact xLSTM recurrence)."""
+    B = x.shape[0]
+    di, H, D = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    xz = nn.dense(p["up_proj"], x[:, 0])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = nn.dense(p["wq"], xi).reshape(B, H, D).astype(jnp.float32)
+    k = nn.dense(p["wk"], xi).reshape(B, H, D).astype(jnp.float32)
+    v = nn.dense(p["wv"], xi).reshape(B, H, D).astype(jnp.float32)
+    log_i = nn.dense(p["w_i"], xi.astype(jnp.float32))  # (B,H)
+    log_f = jax.nn.log_sigmoid(nn.dense(p["w_f"], xi.astype(jnp.float32)))
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    kv = state["kv"] * f_sc[..., None, None] + i_sc[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = state["n"] * f_sc[..., None] + i_sc[..., None] * k
+    qs = q / math.sqrt(D)
+    num = jnp.einsum("bhd,bhde->bhe", qs, kv)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    y = nn.rmsnorm(p["norm"], y) * jax.nn.silu(z[:, None, :])
+    return nn.dense(p["down_proj"], y), {"kv": kv, "n": n, "m": m_new}
+
+
+# ===================================================================== #
+# sLSTM (scalar-memory cell with exponential gating)
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class SlstmConfig:
+    d_model: int
+    n_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_slstm(key, cfg: SlstmConfig, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 9)
+    d, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    std = 1.0 / math.sqrt(d)
+    p = {"norm": nn.rmsnorm_init(d, dtype=dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = nn.dense_init(ks[i], d, d, dtype=dtype)
+        # block-diagonal recurrent mixing (per head): (H, Dh, Dh)
+        p[f"r_{g}"] = nn.normal_init(ks[4 + i], (H, Dh, Dh), std, dtype)
+        p[f"b_{g}"] = jnp.zeros((d,), jnp.float32)
+    p["out"] = nn.dense_init(ks[8], d, d, dtype=dtype)
+    return p
+
+
+def slstm_init_state(cfg: SlstmConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, cfg: SlstmConfig, xt, state):
+    """One sLSTM step; xt (B, d) fp32."""
+    B = xt.shape[0]
+    H, Dh = cfg.n_heads, cfg.head_dim
+    h_prev = state["h"].reshape(B, H, Dh)
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", h_prev, p[f"r_{g}"].astype(jnp.float32)).reshape(B, -1)
+
+    zi = nn.dense(p["w_i"], xt) + rec("i") + p["b_i"]
+    zf = nn.dense(p["w_f"], xt) + rec("f") + p["b_f"]
+    zz = nn.dense(p["w_z"], xt) + rec("z") + p["b_z"]
+    zo = nn.dense(p["w_o"], xt) + rec("o") + p["b_o"]
+
+    m_new = jnp.maximum(zf + state["m"], zi)
+    i_sc = jnp.exp(zi - m_new)
+    f_sc = jnp.exp(zf + state["m"] - m_new)
+    c = f_sc * state["c"] + i_sc * jnp.tanh(zz)
+    n = f_sc * state["n"] + i_sc
+    h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_fwd(p: Params, cfg: SlstmConfig, x: jax.Array) -> jax.Array:
+    """Sequential scan over time (sLSTM has no parallel form)."""
+    B, S, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(state, xt):
+        state = _slstm_cell(p, cfg, xt, state)
+        return state, state["h"]
+
+    init = slstm_init_state(cfg, B)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(xf, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,d)
+    y = nn.rmsnorm(p["norm"], y)
+    return nn.dense(p["out"], y)
+
+
+def slstm_decode(p, cfg: SlstmConfig, x, state):
+    new_state = _slstm_cell(p, cfg, x[:, 0].astype(jnp.float32), state)
+    y = new_state["h"][:, None, :].astype(x.dtype)
+    y = nn.rmsnorm(p["norm"], y)
+    return nn.dense(p["out"], y), new_state

@@ -1,0 +1,358 @@
+"""Block composition: heterogeneous layer patterns, scanned over repeats.
+
+A model is ``n_layers`` blocks arranged as a repeating **pattern** (period
+``p``): e.g. gemma3 is ``(local, local, local, local, local, global)``
+repeated; zamba2 is ``(m2, m2, m2, m2, m2, m2, shared-attn)`` repeated;
+dense archs have period 1.  Parameters for each pattern position are
+**stacked over repeats** and the forward pass is a single
+``jax.lax.scan`` over repeats with the pattern body unrolled inside —
+compile time and HLO size stay O(pattern), not O(n_layers), which is what
+makes the 512-device dry-run of 40-54-layer models tractable.
+
+Zamba2-style *shared* blocks keep one un-stacked base parameter set plus
+per-repeat LoRA deltas (scanned), following the published architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.attention import (
+    AttnConfig,
+    attention_fwd,
+    gqa_decode,
+    init_attention,
+    mla_decode,
+)
+from repro.models.ffn import ffn_fwd, init_ffn
+from repro.models.moe import MoeConfig, init_moe, moe_fwd
+from repro.models.ssm import (
+    Mamba2Config,
+    MlstmConfig,
+    SlstmConfig,
+    init_mamba2,
+    init_mlstm,
+    init_slstm,
+    mamba2_decode,
+    mamba2_fwd,
+    mamba2_init_state,
+    mlstm_decode,
+    mlstm_fwd,
+    mlstm_init_state,
+    slstm_decode,
+    slstm_fwd,
+    slstm_init_state,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One block of the pattern."""
+
+    kind: str  # attn | mamba2 | mlstm | slstm
+    attn: Optional[AttnConfig] = None
+    d_ff: int = 0
+    ffn_kind: str = "swiglu"
+    moe: Optional[MoeConfig] = None
+    mamba: Optional[Mamba2Config] = None
+    mlstm: Optional[MlstmConfig] = None
+    slstm: Optional[SlstmConfig] = None
+    shared: bool = False  # zamba2 shared block (base params + LoRA)
+    lora_rank: int = 64
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.d_ff > 0 or self.moe is not None
+
+
+# ===================================================================== #
+# single block
+# ===================================================================== #
+def init_block(key, spec: BlockSpec, d_model: int, dtype=jnp.float32) -> Params:
+    ks = nn.split_keys(key, 4)
+    p: Params = {"norm1": nn.rmsnorm_init(d_model, dtype=dtype)}
+    if spec.kind == "attn":
+        p["attn"] = init_attention(ks[0], spec.attn, dtype)
+    elif spec.kind == "mamba2":
+        p["mixer"] = init_mamba2(ks[0], spec.mamba, dtype)
+    elif spec.kind == "mlstm":
+        p["mixer"] = init_mlstm(ks[0], spec.mlstm, dtype)
+    elif spec.kind == "slstm":
+        p["mixer"] = init_slstm(ks[0], spec.slstm, dtype)
+    else:
+        raise ValueError(spec.kind)
+    if spec.has_ffn:
+        p["norm2"] = nn.rmsnorm_init(d_model, dtype=dtype)
+        if spec.moe is not None:
+            p["moe"] = init_moe(ks[1], d_model, spec.moe, dtype)
+        else:
+            p["ffn"] = init_ffn(ks[1], d_model, spec.d_ff, spec.ffn_kind, dtype)
+    return p
+
+
+def init_lora(key, spec: BlockSpec, d_model: int, dtype=jnp.float32) -> Params:
+    """LoRA deltas for a shared attn block (zamba2): A/B for wq and wo."""
+    ks = nn.split_keys(key, 4)
+    r = spec.lora_rank
+    H, D = spec.attn.n_heads, spec.attn.head_dim
+    return {
+        "qa": nn.normal_init(ks[0], (d_model, r), 0.02, dtype),
+        "qb": jnp.zeros((r, H * D), dtype=dtype),
+        "oa": nn.normal_init(ks[1], (H * D, r), 0.02, dtype),
+        "ob": jnp.zeros((r, d_model), dtype=dtype),
+    }
+
+
+def _apply_lora(p_attn: Params, lora: Optional[Params], x_normed, y_attn_in=None):
+    return p_attn  # weights are not mutated; LoRA applied additively below
+
+
+def block_fwd(
+    p: Params,
+    spec: BlockSpec,
+    x: jax.Array,
+    positions: jax.Array,
+    lora: Optional[Params] = None,
+    impl: str = "chunked",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = nn.rmsnorm(p["norm1"], x)
+    if spec.kind == "attn":
+        y = attention_fwd(p["attn"], spec.attn, h, positions, impl=impl)
+        if lora is not None:
+            # additive low-rank delta on the q→o path (zamba2 per-repeat)
+            y = y + nn.dense({"w": lora["ob"]}, nn.dense({"w": lora["oa"]},
+                nn.dense({"w": lora["qb"]}, nn.dense({"w": lora["qa"]}, h))))
+    elif spec.kind == "mamba2":
+        y = mamba2_fwd(p["mixer"], spec.mamba, h)
+    elif spec.kind == "mlstm":
+        y = mlstm_fwd(p["mixer"], spec.mlstm, h)
+    else:
+        y = slstm_fwd(p["mixer"], spec.slstm, h)
+    x = x + y
+    if spec.has_ffn:
+        h2 = nn.rmsnorm(p["norm2"], x)
+        if spec.moe is not None:
+            y2, aux = moe_fwd(p["moe"], spec.moe, h2)
+        else:
+            y2 = ffn_fwd(p["ffn"], h2, spec.ffn_kind)
+        x = x + y2
+    return x, aux
+
+
+# ===================================================================== #
+# decode state per block
+# ===================================================================== #
+def init_block_state(
+    spec: BlockSpec, batch: int, max_len: int, dtype=jnp.float32
+) -> Params:
+    if spec.kind == "attn":
+        a = spec.attn
+        if a.is_mla:
+            return {
+                "ckv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_len, a.qk_rope_dim), dtype),
+            }
+        # sliding-window layers cap their cache at the window size and use
+        # it as a rolling buffer (O(W) memory for long_500k decode)
+        w = max_len if a.window is None else min(max_len, a.window)
+        return {
+            "k": jnp.zeros((batch, w, a.n_kv_heads, a.head_dim), dtype),
+            "v": jnp.zeros((batch, w, a.n_kv_heads, a.head_dim), dtype),
+        }
+    if spec.kind == "mamba2":
+        return mamba2_init_state(spec.mamba, batch, dtype)
+    if spec.kind == "mlstm":
+        return mlstm_init_state(spec.mlstm, batch)
+    return slstm_init_state(spec.slstm, batch)
+
+
+def block_decode(
+    p: Params,
+    spec: BlockSpec,
+    x: jax.Array,  # (B, 1, d)
+    state: Params,
+    cur_len: jax.Array,
+    positions: jax.Array,
+    lora: Optional[Params] = None,
+) -> Tuple[jax.Array, Params]:
+    h = nn.rmsnorm(p["norm1"], x)
+    if spec.kind == "attn":
+        a = spec.attn
+        if a.is_mla:
+            y, ckv, krope = mla_decode(
+                p["attn"], a, h, state["ckv"], state["krope"], cur_len, positions
+            )
+            state = {"ckv": ckv, "krope": krope}
+        else:
+            rolling = a.window is not None and state["k"].shape[-3] == a.window
+            y, kc, vc = gqa_decode(
+                p["attn"], a, h, state["k"], state["v"], cur_len, positions,
+                rolling=rolling,
+            )
+            state = {"k": kc, "v": vc}
+        if lora is not None:
+            y = y + nn.dense({"w": lora["ob"]}, nn.dense({"w": lora["oa"]},
+                nn.dense({"w": lora["qb"]}, nn.dense({"w": lora["qa"]}, h))))
+    elif spec.kind == "mamba2":
+        y, state = mamba2_decode(p["mixer"], spec.mamba, h, state)
+    elif spec.kind == "mlstm":
+        y, state = mlstm_decode(p["mixer"], spec.mlstm, h, state)
+    else:
+        y, state = slstm_decode(p["mixer"], spec.slstm, h, state)
+    x = x + y
+    if spec.has_ffn:
+        h2 = nn.rmsnorm(p["norm2"], x)
+        if spec.moe is not None:
+            y2, _ = moe_fwd(p["moe"], spec.moe, h2)
+        else:
+            y2 = ffn_fwd(p["ffn"], h2, spec.ffn_kind)
+        x = x + y2
+    return x, state
+
+
+# ===================================================================== #
+# pattern stack (scan over repeats)
+# ===================================================================== #
+def init_stack(
+    key,
+    pattern: Sequence[BlockSpec],
+    n_repeats: int,
+    d_model: int,
+    dtype=jnp.float32,
+) -> Params:
+    """Stacked params: for each pattern position, leaves have leading
+    ``n_repeats`` dim.  Shared blocks store base params once + stacked
+    LoRA deltas."""
+    p: Params = {"blocks": [], "shared": [], "lora": []}
+    keys = nn.split_keys(key, len(pattern) * (n_repeats + 1))
+    ki = 0
+    for pos, spec in enumerate(pattern):
+        if spec.shared:
+            base = init_block(keys[ki], spec, d_model, dtype)
+            ki += 1
+            loras = [init_lora(keys[ki + r], spec, d_model, dtype) for r in range(n_repeats)]
+            ki += n_repeats
+            p["blocks"].append(None)
+            p["shared"].append(base)
+            p["lora"].append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *loras))
+        else:
+            reps = [init_block(keys[ki + r], spec, d_model, dtype) for r in range(n_repeats)]
+            ki += n_repeats
+            p["blocks"].append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *reps))
+            p["shared"].append(None)
+            p["lora"].append(None)
+    return p
+
+
+def stack_fwd(
+    p: Params,
+    pattern: Sequence[BlockSpec],
+    n_repeats: int,
+    x: jax.Array,
+    positions: jax.Array,
+    impl: str = "chunked",
+    remat: bool = False,
+    remat_policy=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scan over repeats; pattern body unrolled inside.
+
+    ``remat_policy=None`` → full per-block remat (recomputes everything,
+    including the TP partial-sum all-reduces — cheapest memory, max
+    collective replay).  Pass e.g.
+    ``jax.checkpoint_policies.dots_with_no_batch_dims_saveable`` to save
+    matmul outputs: no all-reduce replay in backward, +activation memory
+    (the §Perf collective-vs-memory trade)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        for pos, spec in enumerate(pattern):
+            blk = xs[f"b{pos}"]
+            lora = xs[f"l{pos}"]
+            params = blk if blk is not None else p["shared"][pos]
+            if remat:
+                # per-block remat: backward recomputes one block at a
+                # time, so peak memory is O(1 block) + residual stream —
+                # not O(pattern) (critical for the unrolled dry-run form)
+                def _blk(params_, h_, lora_, _spec=spec):
+                    return block_fwd(params_, _spec, h_, positions,
+                                     lora=lora_, impl=impl)
+
+                ck = (jax.checkpoint(_blk, policy=remat_policy)
+                      if remat_policy is not None else jax.checkpoint(_blk))
+                h, a = ck(params, h, lora)
+            else:
+                h, a = block_fwd(params, spec, h, positions, lora=lora, impl=impl)
+            aux = aux + a
+        return (h, aux), None
+
+    body_fn = body
+    xs = {}
+    for pos in range(len(pattern)):
+        xs[f"b{pos}"] = p["blocks"][pos]
+        xs[f"l{pos}"] = p["lora"][pos]
+    if n_repeats == 1:
+        # unrolled form (dry-run/cost-analysis): no scan wrapper — XLA
+        # reuses buffers freely and cost_analysis sees every block
+        xs0 = jax.tree_util.tree_map(lambda a: a[0], xs)
+        (h, aux), _ = body_fn((x, jnp.zeros((), jnp.float32)), xs0)
+        return h, aux
+    (h, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+    return h, aux
+
+
+def init_stack_state(
+    pattern: Sequence[BlockSpec],
+    n_repeats: int,
+    batch: int,
+    max_len: int,
+    dtype=jnp.float32,
+) -> List[Params]:
+    """Per pattern position: state stacked over repeats."""
+    out = []
+    for spec in pattern:
+        one = init_block_state(spec, batch, max_len, dtype)
+        out.append(
+            jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (n_repeats,) + a.shape).copy(), one
+            )
+        )
+    return out
+
+
+def stack_decode(
+    p: Params,
+    pattern: Sequence[BlockSpec],
+    n_repeats: int,
+    x: jax.Array,
+    states: List[Params],
+    cur_len: jax.Array,
+    positions: jax.Array,
+) -> Tuple[jax.Array, List[Params]]:
+    def body(h, xs):
+        new_states = {}
+        for pos, spec in enumerate(pattern):
+            blk = xs[f"b{pos}"]
+            lora = xs[f"l{pos}"]
+            params = blk if blk is not None else p["shared"][pos]
+            h, st = block_decode(
+                params, spec, h, xs[f"s{pos}"], cur_len, positions, lora=lora
+            )
+            new_states[f"s{pos}"] = st
+        return h, new_states
+
+    xs = {}
+    for pos in range(len(pattern)):
+        xs[f"b{pos}"] = p["blocks"][pos]
+        xs[f"l{pos}"] = p["lora"][pos]
+        xs[f"s{pos}"] = states[pos]
+    h, new_states = jax.lax.scan(body, x, xs)
+    return h, [new_states[f"s{pos}"] for pos in range(len(pattern))]

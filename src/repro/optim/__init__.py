@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, cosine_schedule, global_norm, init, update
+
+__all__ = ["AdamWConfig", "AdamWState", "cosine_schedule", "global_norm", "init", "update"]

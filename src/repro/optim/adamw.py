@@ -1,0 +1,101 @@
+"""AdamW (+ global-norm clipping, schedules) in pure JAX.
+
+Mixed precision: parameters may be bf16; the optimizer keeps fp32 master
+copies (``master=True``) and casts back on update — the production
+configuration for bf16 training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    master: bool = True  # fp32 master weights when params are low-precision
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Params
+    v: Params
+    master: Optional[Params]
+
+
+def _f32(t):
+    return jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), t)
+
+
+def init(params: Params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    master = _f32(params) if cfg.master else None
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def update(
+    grads: Params,
+    state: AdamWState,
+    params: Params,
+    cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+) -> Tuple[Params, AdamWState, Dict[str, jnp.ndarray]]:
+    """One AdamW step → (new_params, new_state, metrics)."""
+    g32 = _f32(grads)
+    gnorm = global_norm(g32)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    m = jax.tree_util.tree_map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g, state.m, g32)
+    v = jax.tree_util.tree_map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g, state.v, g32)
+
+    base = state.master if cfg.master else _f32(params)
+
+    def upd(p32, m_, v_):
+        mh = m_ / b1c
+        vh = v_ / b2c
+        return p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p32)
+
+    new32 = jax.tree_util.tree_map(upd, base, m, v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, n: n.astype(p.dtype), params, new32
+    )
+    new_state = AdamWState(step=step, m=m, v=v, master=new32 if cfg.master else None)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+
+
+# --------------------------------------------------------------------- #
+# schedules
+# --------------------------------------------------------------------- #
+def cosine_schedule(warmup: int, total: int, min_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn

@@ -1,0 +1,10 @@
+from repro.serving.kv_cache import TieredKVCache, KVCacheConfig
+from repro.serving.engine import ServingEngine, EngineConfig, Request
+
+__all__ = [
+    "EngineConfig",
+    "KVCacheConfig",
+    "Request",
+    "ServingEngine",
+    "TieredKVCache",
+]

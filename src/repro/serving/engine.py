@@ -1,0 +1,406 @@
+"""Serving engine: continuous batching over the tiered paged KV cache.
+
+The decode data plane supplies exactly the access stream TPP consumes
+(DESIGN.md §2):
+
+* **Sliding-window layers** touch only the recent pages — old pages go
+  cold naturally (gemma3's 5:1 pattern).
+* **Page-level top-k sparse attention** (``topk_pages``): long-range
+  layers attend the last ``recent_pages`` exactly plus the top-k older
+  pages ranked by query·page-key-summary relevance (Quest/InfLLM-style,
+  adapted to TPU whole-token-range pages).  This is the TPU-native
+  source of the *page access skew* that CXL workloads exhibit in the
+  paper (§3: 55-80% of pages idle over any 2-minute window); with
+  ``topk_pages=None`` attention is exact/full and every page is hot
+  (used by the parity tests).
+* **Session pause/resume**: paused sequences' pages are retyped FILE and
+  stop being touched → TPP demotes them; resume touches them again →
+  promotion with hysteresis.
+
+The engine reports per-step slow-tier page hits to the policy
+(`TppPolicy` or any baseline from ``repro.core.baselines``), which
+migrates payloads through the cache's ``on_migrate`` hook — real buffer
+copies, identical mechanics to the kernel patchset, just one level down
+the memory hierarchy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PageType, Tier, TppConfig, make_policy
+from repro.models import nn
+from repro.models.attention import AttnConfig, make_cos_sin, _rotate
+from repro.models.ffn import ffn_fwd
+from repro.models.model import ModelConfig
+from repro.models.moe import moe_fwd
+from repro.serving.kv_cache import KVCacheConfig, TieredKVCache
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    page_size: int = 16
+    num_fast: int = 256
+    num_slow: int = 1024
+    topk_pages: Optional[int] = 4  # None → exact full attention
+    recent_pages: int = 2  # always-attended tail (exact local context)
+    policy: str = "tpp"
+    tpp: TppConfig = dataclasses.field(default_factory=TppConfig)
+    max_seqs: int = 8
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class _Seq:
+    """Engine-side sequence state."""
+
+    def __init__(self, rid: int) -> None:
+        self.rid = rid
+        self.pages: List[int] = []  # pids, in order
+        self.cur_len = 0
+        self.paused = False
+
+
+def _flat_layers(params: Any, cfg: ModelConfig) -> List[Any]:
+    """Unstack scanned params → one param dict per layer, in order."""
+    out: List[Any] = []
+    for sp, (pat, reps) in zip(params["stacks"], cfg.stacks):
+        for r in range(reps):
+            for pos in range(len(pat)):
+                blk = sp["blocks"][pos]
+                if blk is None:
+                    base = sp["shared"][pos]
+                    lora = jax.tree_util.tree_map(lambda x: x[r], sp["lora"][pos])
+                    out.append({"base": base, "lora": lora})
+                else:
+                    out.append(jax.tree_util.tree_map(lambda x: x[r], blk))
+    return out
+
+
+class ServingEngine:
+    """Batched tiered-KV serving for attention-family architectures."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        engine: EngineConfig,
+        seed: int = 0,
+    ) -> None:
+        for spec in cfg.all_specs():
+            if spec.kind != "attn" or spec.attn.is_mla:
+                raise ValueError(
+                    "ServingEngine v1 pages GQA attention archs; SSM/hybrid "
+                    "archs serve from O(1) recurrent state (TPP inapplicable; "
+                    "see DESIGN.md §Arch-applicability), MLA via dense path"
+                )
+        self.cfg = cfg
+        self.ecfg = engine
+        self.specs = cfg.all_specs()
+        self.layers = _flat_layers(params, cfg)
+        self.params = params
+        a0 = self.specs[0].attn
+        kv_width = 2 * a0.n_kv_heads * a0.head_dim
+        self.kv = TieredKVCache(
+            KVCacheConfig(
+                n_layers=cfg.n_layers,
+                page_size=engine.page_size,
+                kv_width=kv_width,
+                num_fast=engine.num_fast,
+                num_slow=engine.num_slow,
+            ),
+            tpp=engine.tpp,
+        )
+        self.policy = make_policy(engine.policy, self.kv.pool, seed=seed)
+        self.seqs: Dict[int, _Seq] = {}
+        self.requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        # page key summaries for top-k selection: pid -> (L, Hkv, D) np
+        self._summaries: Dict[int, np.ndarray] = {}
+        self.steps = 0
+
+    # ---------------------------------------------------------------- #
+    # request lifecycle
+    # ---------------------------------------------------------------- #
+    def add_request(self, prompt: Sequence[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
+        self.requests[rid] = req
+        self.seqs[rid] = _Seq(rid)
+        self._prefill(req)
+        return rid
+
+    def pause(self, rid: int) -> None:
+        """Session pause: pages become FILE (cold prefix bulk, §5.4)."""
+        seq = self.seqs[rid]
+        seq.paused = True
+        for pid in seq.pages:
+            self.kv.retype(pid, PageType.FILE)
+
+    def resume(self, rid: int) -> None:
+        self.seqs[rid].paused = False
+
+    def finish(self, rid: int) -> None:
+        for pid in self.seqs[rid].pages:
+            self._summaries.pop(pid, None)
+            self.kv.free_page(pid)
+        del self.seqs[rid]
+
+    # ---------------------------------------------------------------- #
+    # prefill
+    # ---------------------------------------------------------------- #
+    def _ensure_page(self, seq: _Seq) -> Tuple[int, int]:
+        """Page + slot for the next token; allocates on boundary."""
+        slot = seq.cur_len % self.ecfg.page_size
+        if slot == 0:
+            if seq.pages:
+                # the sealed tail page becomes long-lived prefix bulk
+                self.kv.retype(seq.pages[-1], PageType.FILE)
+            seq.pages.append(self.kv.alloc_page(PageType.ANON))
+        return seq.pages[-1], slot
+
+    def _prefill(self, req: Request) -> None:
+        """Run the stack over ``prompt[:-1]``, paging out per-layer KV.
+
+        The last prompt token is fed by the first decode step (whose
+        logits produce the first generated token) — standard
+        prefill/decode split."""
+        seq = self.seqs[req.rid]
+        if len(req.prompt) <= 1:
+            return
+        toks = jnp.asarray(req.prompt[:-1], jnp.int32)[None, :]  # (1, S)
+        S = toks.shape[1]
+        x = nn.embed(self.params["embed"], toks)
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        kv_per_layer = []
+        for li, spec in enumerate(self.specs):
+            p = self.layers[li]
+            pa = p["base"] if "base" in p else p
+            a = spec.attn
+            h = nn.rmsnorm(pa["norm1"], x)
+            B = 1
+            q = nn.dense(pa["attn"]["wq"], h).reshape(B, S, a.n_heads, a.head_dim)
+            k = nn.dense(pa["attn"]["wk"], h).reshape(B, S, a.n_kv_heads, a.head_dim)
+            v = nn.dense(pa["attn"]["wv"], h).reshape(B, S, a.n_kv_heads, a.head_dim)
+            cos, sin = make_cos_sin(a, pos)
+            if cos is not None:
+                q = _rotate(a, q, cos, sin)
+                k = _rotate(a, k, cos, sin)
+            from repro.models.attention import reference_attention
+
+            o = reference_attention(q, k, v, causal=True, window=a.window)
+            y = nn.dense(pa["attn"]["wo"], o.reshape(B, S, -1))
+            if "base" in p:
+                lora = p["lora"]
+                y = y + nn.dense({"w": lora["ob"]}, nn.dense({"w": lora["oa"]},
+                    nn.dense({"w": lora["qb"]}, nn.dense({"w": lora["qa"]}, h))))
+            x = x + y
+            if spec.has_ffn:
+                h2 = nn.rmsnorm(pa["norm2"], x)
+                if spec.moe is not None:
+                    y2, _ = moe_fwd(pa["moe"], spec.moe, h2)
+                else:
+                    y2 = ffn_fwd(pa["ffn"], h2, spec.ffn_kind)
+                x = x + y2
+            kv_per_layer.append(
+                jnp.concatenate(
+                    [k[0].reshape(S, -1), v[0].reshape(S, -1)], axis=-1
+                )  # (S, W) — layout [all-k | all-v]
+            )
+        kv_all = jnp.stack(kv_per_layer, axis=0)  # (L, S, W)
+
+        for t in range(S):
+            pid, slot = self._ensure_page(seq)
+            self.kv.write_token(pid, slot, kv_all[:, t, :])
+            seq.cur_len += 1
+        self._refresh_summaries(seq)
+
+    def _refresh_summaries(self, seq: _Seq) -> None:
+        a0 = self.specs[0].attn
+        Hkv, D = a0.n_kv_heads, a0.head_dim
+        for pid in seq.pages:
+            page = np.asarray(self.kv.gather_pages([pid])[0])  # (L, P, W)
+            k = page[..., : Hkv * D].reshape(page.shape[0], page.shape[1], Hkv, D)
+            self._summaries[pid] = k.mean(axis=1)  # (L, Hkv, D)
+
+    # ---------------------------------------------------------------- #
+    # page selection (the access skew)
+    # ---------------------------------------------------------------- #
+    def _select_pages(self, seq: _Seq, q_mean: np.ndarray) -> List[int]:
+        """Recent tail pages (exact) + top-k older pages by relevance."""
+        n = len(seq.pages)
+        recent = seq.pages[max(0, n - self.ecfg.recent_pages):]
+        if self.ecfg.topk_pages is None:
+            return list(seq.pages)
+        older = seq.pages[: max(0, n - self.ecfg.recent_pages)]
+        if not older or self.ecfg.topk_pages == 0:
+            return recent
+        scores = []
+        for pid in older:
+            s = self._summaries.get(pid)
+            scores.append(float(np.einsum("hd,lhd->", q_mean, s)) if s is not None else -1e9)
+        order = np.argsort(scores)[::-1][: self.ecfg.topk_pages]
+        return [older[i] for i in sorted(order)] + recent
+
+    # ---------------------------------------------------------------- #
+    # decode
+    # ---------------------------------------------------------------- #
+    def step(self) -> Dict[int, int]:
+        """One decode step for all active sequences → {rid: token}."""
+        active = [s for s in self.seqs.values()
+                  if not s.paused and not self.requests[s.rid].done]
+        out: Dict[int, int] = {}
+        slow_hits: List[int] = []
+        fast_hits: List[int] = []
+        for seq in active:
+            tok, s_hits, f_hits = self._decode_one(seq)
+            out[seq.rid] = tok
+            slow_hits += s_hits
+            fast_hits += f_hits
+            req = self.requests[seq.rid]
+            req.out.append(tok)
+            if len(req.out) >= req.max_new:
+                req.done = True
+        # policy step (NUMA-balancing baseline also samples fast hits)
+        if self.ecfg.policy == "numa_balancing":
+            self.policy.step(slow_hits, fast_hits)  # type: ignore[call-arg]
+        else:
+            self.policy.step(slow_hits)
+        self.steps += 1
+        if self.steps % 4 == 0:
+            self.kv.pool.end_interval()
+        return out
+
+    def _decode_one(self, seq: _Seq) -> Tuple[int, List[int], List[int]]:
+        req = self.requests[seq.rid]
+        last_tok = (req.out[-1] if req.out else req.prompt[-1])
+        t = seq.cur_len  # position of the new token
+        x = nn.embed(self.params["embed"], jnp.asarray([[last_tok]], jnp.int32))
+        pos = jnp.asarray([[t]], jnp.int32)
+
+        # page selection is shared across layers (pages span all layers);
+        # use the embedding-projected mean query of layer 0 as the probe.
+        a0 = self.specs[0].attn
+        p0 = self.layers[0]["base"] if "base" in self.layers[0] else self.layers[0]
+        q_probe = nn.dense(p0["attn"]["wq"], nn.rmsnorm(p0["norm1"], x))
+        q_probe = np.asarray(
+            q_probe.reshape(a0.n_heads, a0.head_dim)
+            .reshape(a0.n_kv_heads, -1, a0.head_dim)
+            .mean(axis=1)
+        )  # (Hkv, D)
+        sel = self._select_pages(seq, q_probe)
+
+        # touch + tier accounting (the TPP access stream)
+        s_hits, f_hits = [], []
+        for pid in sel:
+            tier = self.kv.pool.touch(pid)
+            (s_hits if tier == Tier.SLOW else f_hits).append(pid)
+
+        pages = self.kv.gather_pages(sel)  # (n, L, P, W)
+        n_sel = len(sel)
+        P = self.ecfg.page_size
+        # valid token count per selected page
+        valid = np.zeros((n_sel, P), dtype=bool)
+        page_index = {pid: i for i, pid in enumerate(seq.pages)}
+        for j, pid in enumerate(sel):
+            gi = page_index[pid]
+            start = gi * P
+            valid[j] = (np.arange(P) + start) < t
+        valid_j = jnp.asarray(valid.reshape(-1))
+
+        kv_new_layers = []
+        for li, spec in enumerate(self.specs):
+            p = self.layers[li]
+            pa = p["base"] if "base" in p else p
+            a = spec.attn
+            h = nn.rmsnorm(pa["norm1"], x)
+            q = nn.dense(pa["attn"]["wq"], h).reshape(1, 1, a.n_heads, a.head_dim)
+            k = nn.dense(pa["attn"]["wk"], h).reshape(1, 1, a.n_kv_heads, a.head_dim)
+            v = nn.dense(pa["attn"]["wv"], h).reshape(1, 1, a.n_kv_heads, a.head_dim)
+            cos, sin = make_cos_sin(a, pos)
+            if cos is not None:
+                q = _rotate(a, q, cos, sin)
+                k = _rotate(a, k, cos, sin)
+
+            Hkv, D = a.n_kv_heads, a.head_dim
+            lay = pages[:, li].reshape(n_sel * P, -1)  # (nP, W)
+            ks = lay[:, : Hkv * D].reshape(-1, Hkv, D)
+            vs = lay[:, Hkv * D :].reshape(-1, Hkv, D)
+            ks = jnp.concatenate([ks, k[0, :, :, :]], axis=0)  # append current
+            vs = jnp.concatenate([vs, v[0, :, :, :]], axis=0)
+            vmask = jnp.concatenate([valid_j, jnp.ones((1,), bool)])
+            if a.window is not None:
+                # window mask by absolute position of each cache slot
+                abs_pos = np.concatenate(
+                    [np.arange(P) + page_index[pid] * P for pid in sel] + [[t]]
+                )
+                vmask &= jnp.asarray(abs_pos > t - a.window)
+
+            G = a.n_heads // Hkv
+            qg = q[0, 0].reshape(Hkv, G, D) / math.sqrt(D)
+            s = jnp.einsum("hgd,thd->hgt", qg.astype(jnp.float32), ks.astype(jnp.float32))
+            s = jnp.where(vmask[None, None, :], s, -jnp.inf)
+            pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("hgt,thd->hgd", pr, vs.astype(jnp.float32))
+            y = nn.dense(pa["attn"]["wo"], o.reshape(1, 1, -1).astype(x.dtype))
+            if "base" in p:
+                lora = p["lora"]
+                y = y + nn.dense({"w": lora["ob"]}, nn.dense({"w": lora["oa"]},
+                    nn.dense({"w": lora["qb"]}, nn.dense({"w": lora["qa"]}, h))))
+            x = x + y
+            if spec.has_ffn:
+                h2 = nn.rmsnorm(pa["norm2"], x)
+                if spec.moe is not None:
+                    y2, _ = moe_fwd(pa["moe"], spec.moe, h2)
+                else:
+                    y2 = ffn_fwd(pa["ffn"], h2, spec.ffn_kind)
+                x = x + y2
+            kv_new_layers.append(
+                jnp.concatenate([k[0, 0].reshape(-1), v[0, 0].reshape(-1)])
+            )
+
+        h = nn.rmsnorm(self.params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            logits = h @ self.params["embed"]["table"].T.astype(h.dtype)
+        else:
+            logits = nn.dense(self.params["lm_head"], h)
+        tok = int(jnp.argmax(logits[0, -1]))
+
+        # write the new token's KV and update summaries for its page
+        pid, slot = self._ensure_page(seq)
+        self.kv.write_token(pid, slot, jnp.stack(kv_new_layers))
+        seq.cur_len += 1
+        page = np.asarray(self.kv.gather_pages([pid])[0])
+        a0 = self.specs[0].attn
+        kk = page[:, : slot + 1, : a0.n_kv_heads * a0.head_dim].reshape(
+            len(self.specs), slot + 1, a0.n_kv_heads, a0.head_dim
+        )
+        self._summaries[pid] = kk.mean(axis=1)
+        return tok, s_hits, f_hits
+
+    # ---------------------------------------------------------------- #
+    def stats(self) -> Dict[str, Any]:
+        vs = self.kv.pool.vmstat
+        return {
+            "steps": self.steps,
+            "local_fraction": vs.local_access_fraction,
+            "demoted": vs.pgdemote_total,
+            "promoted": vs.pgpromote_total,
+            "migrated_bytes": self.kv.migrated_bytes,
+            "fast_free": self.kv.pool.free_frames(Tier.FAST),
+            "slow_used": self.kv.pool.used_frames(Tier.SLOW),
+        }

@@ -1,0 +1,129 @@
+"""MoE expert tiering — TPP over expert parameter "pages".
+
+The second serving-side application of the paper (DESIGN.md §2): MoE
+routing traffic is zipf-skewed in production, so cold experts are prime
+slow-tier candidates.  Mapping:
+
+* page          = one (layer, expert) weight bundle (wi_gate, wi_up, wo)
+* access stream = router top-k hits per decode/prefill step
+* fast tier     = HBM expert bank (capacity < L×E under memory pressure)
+* slow tier     = host DRAM bank
+
+The same :class:`PagePool` + policy machinery manages placement: the
+router's per-step expert hits are the hint-fault stream; watermarks keep
+HBM headroom so *newly hot* experts can promote immediately (the §5.2
+decoupling argument, verbatim).  Payload moves are real buffer copies.
+
+A fast-tier miss (token routed to a host-resident expert) is served by
+a host gather — modeled cost ``slow_cost``× the HBM access — and
+counted, giving the Table-1-style comparison for expert placement
+policies in ``benchmarks/expert_tiering.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PagePool, PageType, Tier, TppConfig, make_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertTierConfig:
+    n_layers: int
+    n_experts: int
+    fast_capacity: int  # experts resident in HBM (< n_layers*n_experts)
+    policy: str = "tpp"
+    tpp: TppConfig = dataclasses.field(default_factory=TppConfig)
+    slow_cost: float = 8.0  # host-gather latency multiple vs HBM
+
+
+class ExpertTierManager:
+    """Two-tier expert banks + placement policy."""
+
+    def __init__(
+        self,
+        cfg: ExpertTierConfig,
+        expert_weights: Dict[str, np.ndarray],  # each (L, E, ...) stacked
+        seed: int = 0,
+    ) -> None:
+        self.cfg = cfg
+        L, E = cfg.n_layers, cfg.n_experts
+        total = L * E
+        self.names = list(expert_weights)
+        # payload banks: fast bank has fast_capacity slots, slow holds all
+        self.fast_bank = {
+            k: np.zeros((cfg.fast_capacity,) + v.shape[2:], v.dtype)
+            for k, v in expert_weights.items()
+        }
+        self.slow_bank = {
+            k: v.reshape((total,) + v.shape[2:]).copy() for k, v in expert_weights.items()
+        }
+        self.pool = PagePool(
+            cfg.fast_capacity, total, config=cfg.tpp, on_migrate=self._do_migrate
+        )
+        self.policy = make_policy(cfg.policy, self.pool, seed=seed)
+        # page id per (layer, expert) — allocate all as FILE on slow first
+        # (experts are bulky long-lived parameters), then let traffic
+        # promote the hot ones: the §5.4 type-aware starting point.
+        self.pid_of: Dict[Tuple[int, int], int] = {}
+        for le in range(total):
+            page = self.pool.allocate(PageType.FILE, prefer=Tier.SLOW)
+            self.pid_of[(le // E, le % E)] = page.pid
+            # slow frame must equal its bank row: allocation order gives
+            # frame == le because the slow free-list pops ascending
+            assert page.tier == Tier.SLOW and page.frame == le, (page.tier, page.frame, le)
+        self.hbm_hits = 0
+        self.host_hits = 0
+
+    # ---------------------------------------------------------------- #
+    def _do_migrate(self, pid, src, src_frame, dst, dst_frame) -> None:
+        for k in self.names:
+            if src == Tier.FAST:
+                self.slow_bank[k][dst_frame] = self.fast_bank[k][src_frame]
+            else:
+                self.fast_bank[k][dst_frame] = self.slow_bank[k][src_frame]
+
+    def lookup(self, layer: int, expert: int) -> Tuple[Dict[str, np.ndarray], Tier]:
+        """Fetch an expert's weights; counts tier traffic."""
+        pid = self.pid_of[(layer, expert)]
+        page = self.pool.pages[pid]
+        bank = self.fast_bank if page.tier == Tier.FAST else self.slow_bank
+        if page.tier == Tier.FAST:
+            self.hbm_hits += 1
+        else:
+            self.host_hits += 1
+        return {k: bank[k][page.frame] for k in self.names}, page.tier
+
+    def step(self, expert_hits: Sequence[Tuple[int, int]]) -> None:
+        """Report one step of router traffic [(layer, expert), ...]."""
+        slow_hits: List[int] = []
+        fast_hits: List[int] = []
+        for (l, e) in expert_hits:
+            pid = self.pid_of[(l, e)]
+            tier = self.pool.touch(pid)
+            (slow_hits if tier == Tier.SLOW else fast_hits).append(pid)
+        if self.cfg.policy == "numa_balancing":
+            self.policy.step(slow_hits, fast_hits)  # type: ignore[call-arg]
+        else:
+            self.policy.step(slow_hits)
+
+    # ---------------------------------------------------------------- #
+    def modeled_cost(self) -> float:
+        return self.hbm_hits + self.cfg.slow_cost * self.host_hits
+
+    def fast_fraction(self) -> float:
+        t = self.hbm_hits + self.host_hits
+        return self.hbm_hits / t if t else 1.0
+
+    def placement(self) -> np.ndarray:
+        """(L, E) bool — True where expert is HBM-resident."""
+        L, E = self.cfg.n_layers, self.cfg.n_experts
+        out = np.zeros((L, E), bool)
+        for (l, e), pid in self.pid_of.items():
+            out[l, e] = self.pool.pages[pid].tier == Tier.FAST
+        return out

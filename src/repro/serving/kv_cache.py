@@ -1,0 +1,123 @@
+"""Two-tier paged KV cache — the serving-side embodiment of TPP.
+
+Mapping onto the paper (DESIGN.md §2):
+
+* **page**   = ``page_size`` tokens × all attention layers of one
+  sequence (the migration unit, like an OS page spanning an address
+  range).  Payload layout: ``(frames, L, page_size, W)`` with
+  ``W = 2·Hkv·D`` packed (k‖v) per token per layer (or ``r+dr`` for MLA).
+* **fast tier** = HBM-resident buffer (sharded on a real mesh);
+* **slow tier** = host-resident buffer (``memory_kind='pinned_host'`` on
+  TPU; a second array on CPU — the copies are real either way).
+* The **PagePool** from ``repro.core`` is the metadata manager: the
+  engine reports page touches, TPP (or a baseline policy) decides
+  migrations, and this class executes the payload copies via its
+  ``on_migrate`` hook.
+
+Page types: decode-active tail pages of running sequences are ANON
+(hot, short-lived); full prefix pages and pages of paused sessions are
+FILE (bulky, re-accessed on resume / by sparse long-range attention) —
+the §5.4 type-aware allocation then steers prefix bulk to the slow tier
+under pressure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PagePool, PageType, Tier, TppConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    n_layers: int
+    page_size: int  # tokens per page
+    kv_width: int  # elements per token per layer (2*Hkv*D, or r+dr for MLA)
+    num_fast: int  # frames in the fast tier
+    num_slow: int
+    dtype: str = "float32"
+
+    @property
+    def page_bytes(self) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return self.n_layers * self.page_size * self.kv_width * itemsize
+
+
+class TieredKVCache:
+    """Physical two-tier paged KV store + logical page table."""
+
+    def __init__(self, cfg: KVCacheConfig, tpp: Optional[TppConfig] = None) -> None:
+        self.cfg = cfg
+        dt = jnp.dtype(cfg.dtype)
+        shape_f = (cfg.num_fast, cfg.n_layers, cfg.page_size, cfg.kv_width)
+        shape_s = (max(cfg.num_slow, 1), cfg.n_layers, cfg.page_size, cfg.kv_width)
+        self.fast = jnp.zeros(shape_f, dt)
+        self.slow = jnp.zeros(shape_s, dt)
+        self.pool = PagePool(
+            cfg.num_fast, cfg.num_slow, config=tpp, on_migrate=self._do_migrate
+        )
+        self.migrated_pages = 0
+        self.migrated_bytes = 0
+
+    # ---------------------------------------------------------------- #
+    # payload plumbing
+    # ---------------------------------------------------------------- #
+    def _do_migrate(self, pid: int, src: Tier, src_frame: int, dst: Tier, dst_frame: int) -> None:
+        """PagePool hook: physically copy one page between tiers."""
+        if src == Tier.FAST:
+            page = self.fast[src_frame]
+            self.slow = self.slow.at[dst_frame].set(page)
+        else:
+            page = self.slow[src_frame]
+            self.fast = self.fast.at[dst_frame].set(page)
+        self.migrated_pages += 1
+        self.migrated_bytes += self.cfg.page_bytes
+
+    def write_token(self, pid: int, slot: int, kv: jax.Array) -> None:
+        """Write one token's KV (L, W) into page ``pid`` at ``slot``."""
+        page = self.pool.pages[pid]
+        if page.tier == Tier.FAST:
+            self.fast = self.fast.at[page.frame, :, slot, :].set(kv.astype(self.fast.dtype))
+        else:
+            self.slow = self.slow.at[page.frame, :, slot, :].set(kv.astype(self.slow.dtype))
+
+    def gather_pages(self, pids: List[int]) -> jax.Array:
+        """Gather page payloads → (n, L, P, W).  Reads cross tiers."""
+        if not pids:
+            return jnp.zeros((0,) + self.fast.shape[1:], self.fast.dtype)
+        frames_f, frames_s, is_fast = [], [], []
+        for pid in pids:
+            pg = self.pool.pages[pid]
+            is_fast.append(pg.tier == Tier.FAST)
+            frames_f.append(pg.frame if pg.tier == Tier.FAST else 0)
+            frames_s.append(pg.frame if pg.tier == Tier.SLOW else 0)
+        ff = jnp.asarray(frames_f)
+        fs = jnp.asarray(frames_s)
+        m = jnp.asarray(is_fast)[:, None, None, None]
+        return jnp.where(m, self.fast[ff], self.slow[fs])
+
+    # ---------------------------------------------------------------- #
+    # allocation API (used by the engine)
+    # ---------------------------------------------------------------- #
+    def alloc_page(self, page_type: PageType = PageType.ANON) -> int:
+        return self.pool.allocate(page_type).pid
+
+    def free_page(self, pid: int) -> None:
+        self.pool.free(pid)
+
+    def retype(self, pid: int, page_type: PageType) -> None:
+        """Reclassify a page (e.g. ANON tail → FILE prefix when sealed)."""
+        page = self.pool.pages[pid]
+        if page.page_type != page_type:
+            node = self.pool.lru[page.tier]
+            node.discard(pid, page.page_type)
+            page.page_type = page_type
+            node.insert(pid, page_type, page.active)
+
+    def occupancy(self) -> Dict[str, int]:
+        return self.pool.occupancy()

@@ -1,0 +1,249 @@
+"""Unit + property tests for the TPP core (paper §5 semantics)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PagePool,
+    PageType,
+    PageFlags,
+    Tier,
+    TppConfig,
+    TppPolicy,
+    make_policy,
+)
+from repro.core.types import DemoteFail, PromoteFail
+
+
+def make_pool(fast=32, slow=64, **kw) -> PagePool:
+    return PagePool(fast, slow, config=TppConfig(**kw))
+
+
+# --------------------------------------------------------------------- #
+# allocation & watermarks (§5.2)
+# --------------------------------------------------------------------- #
+class TestAllocation:
+    def test_fast_first(self):
+        pool = make_pool()
+        page = pool.allocate(PageType.ANON)
+        assert page.tier == Tier.FAST
+
+    def test_overflow_to_slow_at_min_watermark(self):
+        pool = make_pool(fast=32, slow=16)
+        pages = [pool.allocate(PageType.ANON) for _ in range(40)]
+        tiers = [p.tier for p in pages]
+        assert Tier.SLOW in tiers, "overflow must land on the slow tier"
+        # allocations never dip below the min watermark
+        assert pool.free_frames(Tier.FAST) >= pool.wm_min
+
+    def test_type_aware_allocation(self):
+        """§5.4: FILE pages prefer the slow tier when enabled."""
+        pool = make_pool(file_to_slow=True)
+        f = pool.allocate(PageType.FILE)
+        a = pool.allocate(PageType.ANON)
+        assert f.tier == Tier.SLOW
+        assert a.tier == Tier.FAST
+
+    def test_oom_when_both_full(self):
+        pool = make_pool(fast=8, slow=4)
+        with pytest.raises(MemoryError):
+            for _ in range(20):
+                pool.allocate(PageType.ANON)
+
+    def test_watermark_ordering(self):
+        pool = make_pool(fast=1000)
+        assert pool.wm_min < pool.wm_alloc < pool.wm_demote
+
+
+# --------------------------------------------------------------------- #
+# demotion (§5.1)
+# --------------------------------------------------------------------- #
+class TestDemotion:
+    def test_demotion_on_pressure(self):
+        pool = make_pool(fast=32, slow=64)
+        policy = TppPolicy(pool)
+        for _ in range(31):
+            pool.allocate(PageType.ANON)
+        rep = policy.step([])
+        assert rep.demoted > 0
+        assert pool.free_frames(Tier.FAST) >= pool.wm_demote
+
+    def test_demoted_page_flagged_and_inactive(self):
+        pool = make_pool(fast=32, slow=64)
+        policy = TppPolicy(pool)
+        pages = [pool.allocate(PageType.ANON) for _ in range(31)]
+        policy.step([])
+        demoted = [p for p in pages if p.tier == Tier.SLOW]
+        assert demoted
+        for p in demoted:
+            assert p.demoted  # PG_demoted set (§5.5)
+            assert not p.active  # lands on the slow inactive LRU
+
+    def test_no_demotion_without_pressure(self):
+        pool = make_pool(fast=32, slow=64)
+        policy = TppPolicy(pool)
+        pool.allocate(PageType.ANON)
+        rep = policy.step([])
+        assert rep.demoted == 0
+
+    def test_hot_pages_survive_demotion(self):
+        """Touched pages rotate (second chance); cold ones demote."""
+        pool = make_pool(fast=32, slow=64)
+        policy = TppPolicy(pool)
+        hot = [pool.allocate(PageType.ANON) for _ in range(8)]
+        cold = [pool.allocate(PageType.ANON) for _ in range(23)]
+        for _ in range(4):
+            for p in hot:
+                pool.touch(p.pid)
+            policy.step([])
+        hot_demoted = sum(1 for p in hot if p.tier == Tier.SLOW)
+        cold_demoted = sum(1 for p in cold if p.tier == Tier.SLOW)
+        assert cold_demoted > 0
+        assert hot_demoted == 0, "recently-touched pages must not demote"
+
+    def test_eviction_fallback_when_slow_full(self):
+        """§5.1: migration failure falls back to reclaim (swap analogue)."""
+        pool = make_pool(fast=16, slow=2)
+        policy = TppPolicy(pool)
+        for _ in range(15):
+            pool.allocate(PageType.FILE)
+        rep = policy.step([])
+        assert rep.evicted > 0 or rep.demoted <= 2
+        assert pool.vmstat.pswpout == rep.evicted
+
+
+# --------------------------------------------------------------------- #
+# promotion + hysteresis (§5.3, Fig. 13)
+# --------------------------------------------------------------------- #
+class TestPromotion:
+    def _slow_page(self, pool):
+        return pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+
+    def test_two_touch_filter(self):
+        """First fault activates; second fault promotes."""
+        pool = make_pool()
+        policy = TppPolicy(pool)
+        page = self._slow_page(pool)
+        rep1 = policy.step([page.pid])
+        assert rep1.promoted == 0 and rep1.promote_filtered == 1
+        assert page.active and page.tier == Tier.SLOW
+        rep2 = policy.step([page.pid])
+        assert rep2.promoted == 1
+        assert page.tier == Tier.FAST
+
+    def test_instant_promotion_without_filter(self):
+        pool = PagePool(32, 64, config=TppConfig(active_lru_filter=False))
+        policy = TppPolicy(pool)
+        page = self._slow_page(pool)
+        rep = policy.step([page.pid])
+        assert rep.promoted == 1
+
+    def test_promotion_clears_demoted_flag(self):
+        pool = make_pool()
+        policy = TppPolicy(pool)
+        for _ in range(31):
+            pool.allocate(PageType.ANON)
+        policy.step([])
+        victim = next(p for p in pool.pages.values() if p.tier == Tier.SLOW)
+        policy.step([victim.pid])
+        policy.step([victim.pid])
+        assert victim.tier == Tier.FAST
+        assert not victim.demoted  # PG_demoted cleared on promotion
+
+    def test_promotion_ignores_alloc_watermark(self):
+        """§5.3: promotion may draw fast below wm_alloc (headroom absorbs)."""
+        pool = make_pool(fast=32, slow=64)
+        policy = TppPolicy(pool)
+        while pool.free_frames(Tier.FAST) > pool.wm_alloc:
+            pool.allocate(PageType.ANON)
+        page = self._slow_page(pool)
+        policy.step([page.pid])
+        rep = policy.step([page.pid])
+        assert rep.promoted == 1
+
+    def test_promotion_budget(self):
+        pool = PagePool(64, 64, config=TppConfig(promote_budget=2,
+                                                 active_lru_filter=False))
+        policy = TppPolicy(pool)
+        pages = [self._slow_page(pool) for _ in range(8)]
+        rep = policy.step([p.pid for p in pages])
+        assert rep.promoted == 2
+        assert pool.vmstat.pgpromote_fail_budget == 6
+
+
+# --------------------------------------------------------------------- #
+# decoupling ablation (§5.2, Fig. 17)
+# --------------------------------------------------------------------- #
+def test_decoupled_keeps_headroom_coupled_does_not():
+    for decoupled in (True, False):
+        pool = PagePool(64, 256, config=TppConfig(decoupled=decoupled))
+        policy = TppPolicy(pool)
+        for _ in range(63):
+            pool.allocate(PageType.ANON)
+        policy.step([])
+        free = pool.free_frames(Tier.FAST)
+        if decoupled:
+            assert free >= pool.wm_demote
+        else:
+            assert free <= pool.wm_alloc + 1
+
+
+# --------------------------------------------------------------------- #
+# property tests: pool invariants hold under arbitrary event sequences
+# --------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(
+    events=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 63), st.booleans()),
+        min_size=1,
+        max_size=200,
+    ),
+    policy_name=st.sampled_from(["tpp", "linux", "autotiering"]),
+)
+def test_pool_invariants_under_random_events(events, policy_name):
+    """No frame double-maps, LRU membership consistent, frames conserved."""
+    pool = PagePool(24, 48, config=TppConfig())
+    policy = make_policy(policy_name, pool)
+    live = []
+    for (op, val, flag) in events:
+        try:
+            if op == 0:  # allocate
+                pt = PageType.ANON if flag else PageType.FILE
+                live.append(pool.allocate(pt).pid)
+            elif op == 1 and live:  # touch
+                pool.touch(live[val % len(live)])
+            elif op == 2 and live:  # free
+                pool.free(live.pop(val % len(live)))
+            elif op == 3:  # policy step w/ random slow hits
+                hits = [pid for pid in live[: val % 8]
+                        if pool.pages[pid].tier == Tier.SLOW]
+                policy.step(hits)
+            elif op == 4:  # interval boundary
+                pool.end_interval()
+        except MemoryError:
+            if live:
+                pool.evict_page(live.pop(0))
+    pool.check_invariants()
+    # conservation: live pages == mapped frames
+    assert len(pool.pages) == (
+        pool.used_frames(Tier.FAST) + pool.used_frames(Tier.SLOW)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_tpp_beats_linux_on_skewed_traffic(seed):
+    """On a zipf-skewed workload with cold bulk, TPP never loses to the
+    no-migration baseline on fast-tier traffic share (the paper's core
+    claim, as an order property)."""
+    from repro.core import run_policy_comparison
+
+    res = run_policy_comparison(
+        "cache1", fast_frames=96, slow_frames=512, steps=60,
+        policies=("linux", "tpp"), seed=seed, total_pages=400,
+        measure_from=30,
+    )
+    assert (
+        res["tpp"].mean_local_fraction
+        >= res["linux"].mean_local_fraction - 0.02
+    )

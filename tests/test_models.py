@@ -1,0 +1,202 @@
+"""Per-arch smoke tests (reduced configs) + cross-path parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+)
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B=2, S=16, seed=1):
+    key = jax.random.PRNGKey(seed)
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    toks = jax.random.randint(key, shape, 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.vision_stub:
+        batch["patch_embeds"] = (
+            jax.random.normal(key, (B, 4, cfg.d_model)) * 0.1
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          patch_embeds=batch.get("patch_embeds"))
+    B, S = batch["tokens"].shape[:2]
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    # one train step (grads + update) — must stay finite
+    from repro import optim
+    from repro.optim.adamw import AdamWConfig
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = optim.init(params, opt_cfg)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True
+    )(params)
+    new_params, opt, metrics = optim.update(grads, opt, params, opt_cfg)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    moved = jax.tree_util.tree_reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree_util.tree_map(jnp.subtract, new_params, params),
+        0.0,
+    )
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fwd_decode_parity(arch):
+    """Teacher-forced decode matches the full forward (exact caches)."""
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 10
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    toks = jax.random.randint(jax.random.PRNGKey(1), shape, 0, cfg.vocab)
+    full, _ = forward(params, cfg, toks)
+    st = init_decode_state(cfg, B, S + 2)
+    outs = []
+    for t in range(S):
+        lg, st = decode_step(params, cfg, toks[:, t : t + 1], st,
+                             jnp.full((B,), t, jnp.int32))
+        outs.append(lg)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(seq, np.float32),
+        atol=5e-5, rtol=1e-3,
+    )
+
+
+def test_chunked_ce_matches_full_loss():
+    """ce_chunk streaming path == full-logits loss (and same grads)."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B=2, S=16)
+    l1, _ = loss_fn(params, cfg, batch)
+    l2, _ = loss_fn(params, cfg, batch, ce_chunk=4)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    g1 = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    g2 = jax.grad(lambda p: loss_fn(p, cfg, batch, ce_chunk=4)[0])(params)
+    err = jax.tree_util.tree_reduce(
+        max,
+        jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a - b).max()), g1, g2
+        ),
+        0.0,
+    )
+    assert err < 1e-4, f"chunked-CE grads diverge: {err}"
+
+
+def test_rolling_window_cache_matches_full():
+    """gemma3's rolling window cache == full cache with window mask."""
+    cfg = get_smoke_config("gemma3-4b")  # window=8 in smoke
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 20  # > window
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full, _ = forward(params, cfg, toks)
+    st = init_decode_state(cfg, B, S + 2)
+    outs = []
+    for t in range(S):
+        lg, st = decode_step(params, cfg, toks[:, t : t + 1], st,
+                             jnp.full((B,), t, jnp.int32))
+        outs.append(lg)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(seq, np.float32),
+        atol=5e-5, rtol=1e-3,
+    )
+
+
+def test_mlstm_chunked_exactness():
+    from repro.models.ssm import (
+        MlstmConfig, init_mlstm, mlstm_fwd, mlstm_decode, mlstm_init_state,
+    )
+
+    mc = MlstmConfig(d_model=32, n_heads=4, chunk=8)
+    p = init_mlstm(jax.random.PRNGKey(0), mc)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 21, 32))
+    y_par = mlstm_fwd(p, mc, x)
+    st = mlstm_init_state(mc, 2)
+    ys = []
+    for t in range(21):
+        yt, st = mlstm_decode(p, mc, x[:, t : t + 1], st)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(y_par), np.asarray(jnp.concatenate(ys, 1)), atol=1e-5
+    )
+
+
+def test_mamba2_chunked_exactness():
+    from repro.models.ssm import (
+        Mamba2Config, init_mamba2, mamba2_fwd, mamba2_decode, mamba2_init_state,
+    )
+
+    cfg = Mamba2Config(d_model=32, d_state=16, head_dim=8, chunk=8)
+    p = init_mamba2(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 21, 32)) * 0.5
+    y_par = mamba2_fwd(p, cfg, x)
+    st = mamba2_init_state(cfg, 2)
+    ys = []
+    for t in range(21):
+        yt, st = mamba2_decode(p, cfg, x[:, t : t + 1], st)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(y_par), np.asarray(jnp.concatenate(ys, 1)), atol=1e-5
+    )
+
+
+def test_exact_published_configs():
+    """Full configs carry the exact published hyperparameters."""
+    from repro.configs import get_config
+
+    c = get_config("chatglm3-6b")
+    assert (c.n_layers, c.d_model, c.vocab) == (28, 4096, 65024)
+    a = c.stacks[0][0][0].attn
+    assert (a.n_heads, a.n_kv_heads) == (32, 2)
+    assert c.stacks[0][0][0].d_ff == 13696
+
+    c = get_config("deepseek-v2-lite-16b")
+    assert c.n_layers == 27
+    moe = c.stacks[1][0][0].moe
+    assert (moe.n_experts, moe.top_k, moe.d_ff_expert) == (64, 6, 1408)
+    a = c.stacks[1][0][0].attn
+    assert a.kv_lora_rank == 512
+
+    c = get_config("gemma3-4b")
+    assert c.n_layers == 34
+    locals_ = [s for s in c.all_specs() if s.attn.window is not None]
+    globals_ = [s for s in c.all_specs() if s.attn.window is None]
+    assert len(locals_) == 29 and len(globals_) == 5  # 34L at ~5:1
+
+    c = get_config("zamba2-2.7b")
+    assert c.n_layers == 54
+    assert sum(1 for s in c.all_specs() if s.kind == "mamba2") == 45
+    assert sum(1 for s in c.all_specs() if s.shared) == 9
+
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    m = c.stacks[0][0][0].moe
+    assert (m.n_experts, m.top_k, m.d_ff_expert) == (16, 2, 6400)
+
+    c = get_config("xlstm-350m")
+    assert c.n_layers == 24
+    assert sum(1 for s in c.all_specs() if s.kind == "slstm") == 3

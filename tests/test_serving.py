@@ -1,0 +1,130 @@
+"""Serving engine integration: exactness, tiering, pause/resume, experts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import Tier, TppConfig
+from repro.models.model import decode_step, init_decode_state, init_params
+from repro.serving import EngineConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def dense_reference(cfg, params, prompt, n):
+    st = init_decode_state(cfg, 1, len(prompt) + n + 2)
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    for t in range(len(prompt)):
+        lg, st = decode_step(params, cfg, toks[:, t : t + 1], st,
+                             jnp.asarray([t], jnp.int32))
+    out = [int(jnp.argmax(lg[0, -1]))]
+    for i in range(n - 1):
+        lg, st = decode_step(params, cfg, jnp.asarray([[out[-1]]], jnp.int32),
+                             st, jnp.asarray([len(prompt) + i], jnp.int32))
+        out.append(int(jnp.argmax(lg[0, -1])))
+    return out
+
+
+class TestExactness:
+    def test_paged_engine_matches_dense(self, tiny):
+        cfg, params = tiny
+        prompt = list(np.random.default_rng(0).integers(0, cfg.vocab, 9))
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=64, num_slow=8, topk_pages=None))
+        rid = eng.add_request(prompt, max_new=5)
+        got = [eng.step()[rid] for _ in range(5)]
+        assert got == dense_reference(cfg, params, prompt, 5)
+
+    def test_exact_even_when_pages_tiered(self, tiny):
+        """Migration must never change results — only placement."""
+        cfg, params = tiny
+        prompt = list(np.random.default_rng(1).integers(0, cfg.vocab, 24))
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=8, num_slow=32, topk_pages=None,
+            tpp=TppConfig(demote_budget=16, promote_budget=8)))
+        rid = eng.add_request(prompt, max_new=6)
+        got = [eng.step()[rid] for _ in range(6)]
+        assert eng.kv.pool.used_frames(Tier.SLOW) > 0, "test needs tiering"
+        assert got == dense_reference(cfg, params, prompt, 6)
+        eng.kv.pool.check_invariants()
+
+
+class TestTiering:
+    def test_pause_demotes_resume_promotes(self, tiny):
+        cfg, params = tiny
+        rng = np.random.default_rng(2)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=10, num_slow=64, topk_pages=2,
+            recent_pages=1,
+            tpp=TppConfig(demote_budget=16, promote_budget=8)))
+        r1 = eng.add_request(list(rng.integers(0, cfg.vocab, 30)), max_new=64)
+        r2 = eng.add_request(list(rng.integers(0, cfg.vocab, 30)), max_new=64)
+        eng.pause(r1)
+        for _ in range(12):
+            eng.step()
+        paused_pages = eng.seqs[r1].pages
+        on_slow = sum(1 for pid in paused_pages
+                      if eng.kv.pool.pages[pid].tier == Tier.SLOW)
+        assert on_slow > 0, "paused session pages must demote under pressure"
+        eng.resume(r1)
+        before = eng.kv.pool.vmstat.pgpromote_total
+        for _ in range(12):
+            eng.step()
+        assert eng.kv.pool.vmstat.pgpromote_total > before, \
+            "resume must trigger promotions"
+
+    def test_vmstat_accounting(self, tiny):
+        cfg, params = tiny
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=8, num_slow=32, topk_pages=2))
+        rid = eng.add_request(
+            list(np.random.default_rng(3).integers(0, cfg.vocab, 40)),
+            max_new=10)
+        for _ in range(10):
+            eng.step()
+        vs = eng.kv.pool.vmstat
+        assert vs.access_fast + vs.access_slow > 0
+        assert vs.pgalloc_fast + vs.pgalloc_slow == vs.pgfree + len(eng.kv.pool.pages)
+        # migrations moved real bytes
+        if vs.pgdemote_total + vs.pgpromote_total > 0:
+            assert eng.kv.migrated_bytes > 0
+
+
+class TestExpertTiering:
+    def test_tpp_beats_no_tiering(self):
+        from repro.serving.expert_tier import ExpertTierConfig, ExpertTierManager
+
+        L, E = 2, 8
+        rng = np.random.default_rng(0)
+        weights = {"wi": rng.standard_normal((L, E, 4, 8)).astype(np.float32)}
+
+        def run(policy):
+            mgr = ExpertTierManager(
+                ExpertTierConfig(n_layers=L, n_experts=E, fast_capacity=6,
+                                 policy=policy,
+                                 tpp=TppConfig(demote_budget=4, promote_budget=4)),
+                weights)
+            for step in range(120):
+                hits = []
+                for l in range(L):
+                    r = np.minimum(rng.zipf(1.6, size=2), E) - 1
+                    hits += [(l, int(x)) for x in r]
+                for (l, e) in hits:
+                    mgr.lookup(l, e)
+                mgr.step(hits)
+            return mgr
+
+        m_tpp = run("tpp")
+        m_static = run("linux")
+        assert m_tpp.fast_fraction() > m_static.fast_fraction() + 0.3
+        # payload integrity after many migrations
+        w, _ = m_tpp.lookup(0, 3)
+        np.testing.assert_allclose(w["wi"], weights["wi"][0, 3])
+        m_tpp.pool.check_invariants()

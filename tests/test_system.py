@@ -1,0 +1,130 @@
+"""End-to-end behaviour tests: the paper's headline claims, in-silico.
+
+These run the full mechanism (pool + LRU + policy + trace) and assert the
+*ordering* results of Table 1 / Figs 17-18 — the quantitative table is
+produced by ``benchmarks/``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import TppConfig, run_policy_comparison
+from repro.core.chameleon import Chameleon
+from repro.core.simulator import TieredSimulator
+from repro.core.trace import make_trace
+
+CFG = TppConfig(demote_budget=512, promote_budget=256, sample_rate=0.1)
+
+
+@pytest.fixture(scope="module")
+def comparison():
+    """cache1 on the paper's 1:4 configuration (fast = 20% of memory)."""
+    return run_policy_comparison(
+        "cache1", fast_frames=512, slow_frames=2048, steps=160,
+        total_pages=1950, seed=1, measure_from=100, config=CFG,
+        slow_cost=3.0,
+    )
+
+
+class TestTable1Ordering:
+    def test_tpp_beats_default_linux(self, comparison):
+        assert (comparison["tpp"].throughput_vs_ideal
+                > comparison["linux"].throughput_vs_ideal + 0.02)
+
+    def test_tpp_beats_numa_balancing(self, comparison):
+        assert (comparison["tpp"].throughput_vs_ideal
+                >= comparison["numa_balancing"].throughput_vs_ideal)
+
+    def test_tpp_beats_autotiering(self, comparison):
+        assert (comparison["tpp"].throughput_vs_ideal
+                >= comparison["autotiering"].throughput_vs_ideal)
+
+    def test_ideal_is_upper_bound(self, comparison):
+        for name, r in comparison.items():
+            assert r.throughput_vs_ideal <= 1.0 + 1e-9
+
+    def test_tpp_local_traffic_dominates(self, comparison):
+        """Fig. 14/15: TPP serves the bulk of traffic from the fast tier."""
+        assert comparison["tpp"].mean_local_fraction > 0.65
+        assert (comparison["tpp"].mean_local_fraction
+                > comparison["linux"].mean_local_fraction + 0.25)
+
+
+class TestHysteresisAblation:
+    """Fig. 18: the active-LRU filter slashes promotion traffic."""
+
+    def _run(self, active_filter):
+        cfg = TppConfig(demote_budget=512, promote_budget=256,
+                        sample_rate=0.1, active_lru_filter=active_filter)
+        sim = TieredSimulator("cache1", "tpp", 512, 2048, config=cfg,
+                              seed=3, trace=make_trace("cache1", seed=3,
+                                                       total_pages=1950))
+        return sim.run(120, measure_from=60)
+
+    def test_filter_reduces_promotion_traffic(self):
+        with_f = self._run(True)
+        without = self._run(False)
+        assert with_f.vmstat.pgpromote_total < without.vmstat.pgpromote_total
+        # and ping-pong (re-promotion of demoted pages) drops
+        assert with_f.vmstat.ping_pong_rate <= without.vmstat.ping_pong_rate + 0.05
+
+
+class TestDecouplingAblation:
+    """Fig. 17: coupled reclamation starves promotions under pressure."""
+
+    def _run(self, decoupled):
+        cfg = TppConfig(demote_budget=512, promote_budget=256,
+                        sample_rate=0.1, decoupled=decoupled)
+        sim = TieredSimulator("web", "tpp", 512, 2048, config=cfg,
+                              seed=4, trace=make_trace("web", seed=4,
+                                                       total_pages=1950))
+        return sim.run(120, measure_from=60)
+
+    def test_decoupling_sustains_promotions(self):
+        dec = self._run(True)
+        coup = self._run(False)
+        assert dec.vmstat.pgpromote_total >= coup.vmstat.pgpromote_total
+        assert dec.throughput_vs_ideal >= coup.throughput_vs_ideal - 0.01
+
+
+class TestChameleon:
+    def test_idle_fraction_in_paper_band(self):
+        """§3.2: 55-80% of allocated memory idle over a 2-interval window."""
+        prof = Chameleon(sample_rate=1.0)
+        sim = TieredSimulator("web", "tpp", 2048, 4096, config=CFG,
+                              seed=5, profiler=prof)
+        sim.run(40)
+        idle = prof.idle_fraction(2)
+        assert 0.3 < idle < 0.95  # generous band around the paper's 55-80%
+
+    def test_anon_hotter_than_file(self):
+        """§3.3 / Fig. 8: anon pages run hotter than file pages."""
+        prof = Chameleon(sample_rate=1.0)
+        sim = TieredSimulator("web", "tpp", 2048, 4096, config=CFG,
+                              seed=6, profiler=prof)
+        sim.run(40)
+        t = prof.temperature_fractions(2)
+        from repro.core import PageType
+
+        assert t[PageType.ANON]["hot"] > t[PageType.FILE]["hot"]
+
+    def test_reaccess_cdf_monotone(self):
+        prof = Chameleon(sample_rate=1.0)
+        sim = TieredSimulator("cache1", "tpp", 2048, 4096, config=CFG,
+                              seed=7, profiler=prof)
+        sim.run(40)
+        cdf = prof.reaccess_cdf(16)
+        assert (np.diff(cdf) >= -1e-9).all()
+        assert cdf[-1] <= 1.0
+
+    def test_sampling_overhead_tradeoff(self):
+        """Lower sample rates record proportionally fewer samples (the
+        §3 overhead/accuracy knob)."""
+        counts = {}
+        for rate in (1.0, 0.1):
+            prof = Chameleon(sample_rate=rate, seed=1)
+            sim = TieredSimulator("cache1", "tpp", 2048, 4096, config=CFG,
+                                  seed=8, profiler=prof)
+            sim.run(20)
+            counts[rate] = prof.total_samples
+        assert counts[0.1] < counts[1.0] * 0.2

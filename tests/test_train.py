@@ -1,0 +1,167 @@
+"""Training substrate: loop, accumulation, checkpoint/restart, offload."""
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig
+from repro.launch.train import make_train_step, train_loop
+from repro.optim.adamw import AdamWConfig
+
+
+def test_loss_decreases():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    rep = train_loop(cfg, DataConfig(seq_len=64, global_batch=4),
+                     AdamWConfig(lr=1e-3), steps=20, log_every=0)
+    assert rep.losses[-1] < rep.losses[0]
+    assert rep.skipped == 0
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 must match accum=1 on the same global batch (up to fp)."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    from repro.models.model import init_params
+    from repro import optim
+
+    opt_cfg = AdamWConfig(lr=1e-3, clip_norm=None)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = optim.init(params, opt_cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    s1 = make_train_step(cfg, opt_cfg, accum=1)
+    s2 = make_train_step(cfg, opt_cfg, accum=2)
+    p1, _, m1 = s1(params, opt, batch)
+    p2, _, m2 = s2(params, opt, batch)
+    err = jax.tree_util.tree_reduce(
+        max, jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2), 0.0
+    )
+    assert err < 5e-5, f"accumulated params diverge: {err}"
+
+
+def test_checkpoint_restart_exact():
+    """kill/restart: resumed run reproduces the uninterrupted run."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    dc = DataConfig(seq_len=32, global_batch=4)
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        # uninterrupted 12 steps
+        full = train_loop(cfg, dc, AdamWConfig(lr=1e-3), steps=12,
+                          ckpt_dir=d1, ckpt_every=100, log_every=0)
+        # interrupted at 6 + resume to 12
+        train_loop(cfg, dc, AdamWConfig(lr=1e-3), steps=6,
+                   ckpt_dir=d2, ckpt_every=100, log_every=0)
+        resumed = train_loop(cfg, dc, AdamWConfig(lr=1e-3), steps=12,
+                             ckpt_dir=d2, ckpt_every=100, log_every=0)
+        assert resumed.resumed_from == 6
+        assert resumed.steps_run == 6
+        # same trajectory: final losses match closely
+        assert abs(full.losses[-1] - resumed.losses[-1]) < 1e-4
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+def test_checkpoint_atomicity():
+    """A torn tmp dir is never picked up as a restore point."""
+    from repro.checkpoint import CheckpointManager
+
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d)
+        tree = {"a": jnp.ones((4,)), "b": {"c": jnp.zeros((2, 2))}}
+        mgr.save(5, tree, blocking=True)
+        # simulate a crash mid-write: tmp dir without manifest
+        os.makedirs(os.path.join(d, ".tmp-9", ), exist_ok=True)
+        # and a final dir without manifest (torn rename impossible, but
+        # guard anyway)
+        os.makedirs(os.path.join(d, "step_0000000009"), exist_ok=True)
+        assert mgr.steps() == [5]
+        step, restored = mgr.restore_latest(tree)
+        assert step == 5
+        assert jnp.allclose(restored["a"], tree["a"])
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_checkpoint_treedef_mismatch_rejected():
+    from repro.checkpoint import CheckpointManager
+
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"a": jnp.ones((4,))}, blocking=True)
+        with pytest.raises(ValueError, match="treedef"):
+            mgr.restore(1, {"a": jnp.ones((4,)), "b": jnp.ones((1,))})
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_nan_containment():
+    """A poisoned batch is skipped, params unchanged, counter ticks."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    from repro.models.model import init_params
+    from repro import optim
+
+    opt_cfg = AdamWConfig(lr=1e30)  # guarantees non-finite grad_norm? no —
+    # instead poison via huge lr is not grads; craft inf loss by labels
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = optim.init(params, opt_cfg)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    # poison params with a NaN → grad_norm NaN → step skipped
+    bad = jax.tree_util.tree_map(lambda x: x, params)
+    bad["final_norm"]["scale"] = bad["final_norm"]["scale"].at[0].set(jnp.nan)
+    new_p, _, metrics = step(bad, opt, batch)
+    assert int(metrics["skipped"]) == 1
+    # params unchanged (update rejected)
+    same = jax.tree_util.tree_all(
+        jax.tree_util.tree_map(
+            lambda a, b: jnp.array_equal(a, b, equal_nan=True), new_p, bad
+        )
+    )
+    assert bool(same)
+
+
+def test_offload_plan_watermarks():
+    from repro.core import Tier, TppConfig
+    from repro.optim.offload import apply_placement, plan_offload
+    from repro.models.model import init_params
+    from repro import optim
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = optim.init(params, AdamWConfig())
+    total = sum(x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(opt))
+    plan = plan_offload(opt, hbm_budget_bytes=total // 3)
+    # headroom respected: fast usage below (1 - wm_demote) × budget
+    assert plan.used_bytes <= (total // 3)
+    assert 0 < plan.fraction_fast() < 1
+    # placement is total
+    n_leaves = len(jax.tree_util.tree_leaves(opt))
+    assert len(plan.placement) == n_leaves
+    out = apply_placement(opt, plan)  # identity on CPU, must not crash
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(opt)
+
+
+def test_data_pipeline_sharding_disjoint():
+    """Different dp ranks see the right shapes and deterministic streams."""
+    from repro.data import make_batches
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    b0 = next(make_batches(DataConfig(seq_len=16, global_batch=8, dp_rank=0,
+                                      dp_size=2, seed=7), cfg))
+    b0_again = next(make_batches(DataConfig(seq_len=16, global_batch=8,
+                                            dp_rank=0, dp_size=2, seed=7), cfg))
+    b1 = next(make_batches(DataConfig(seq_len=16, global_batch=8, dp_rank=1,
+                                      dp_size=2, seed=7), cfg))
+    assert b0["tokens"].shape == (4, 16)
+    assert (b0["tokens"] == b0_again["tokens"]).all(), "must be deterministic"
+    assert not (b0["tokens"] == b1["tokens"]).all(), "ranks must differ"
