@@ -16,23 +16,25 @@ from repro.core.trace import make_trace
 
 
 def _sim(workload, policy, cfg, geom="1:4", seed=SEED, slow_cost=SLOW_COST,
-         steps=STEPS, measure=MEASURE_FROM):
+         steps=STEPS, measure=MEASURE_FROM, engine="reference"):
     fast, slow, total = GEOM[geom]
     sim = TieredSimulator(workload, policy, fast, slow, config=cfg,
                           slow_cost=slow_cost, seed=seed,
                           trace=make_trace(workload, seed=seed,
-                                           total_pages=total))
+                                           total_pages=total),
+                          engine=engine)
     return sim.run(steps, measure_from=measure)
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, engine: str = "reference") -> List[str]:
     steps = 100 if quick else STEPS
     measure = 60 if quick else MEASURE_FROM
     out = []
 
     # ---- Fig 14/15: local-traffic convergence over time -------------- #
     t0 = time.time()
-    r = _sim("cache1", "tpp", POLICY_CFG, steps=steps, measure=measure)
+    r = _sim("cache1", "tpp", POLICY_CFG, steps=steps, measure=measure,
+             engine=engine)
     dt_us = (time.time() - t0) * 1e6 / steps
     lf = np.array(r.local_fraction)
     q = max(1, len(lf) // 4)
@@ -42,9 +44,9 @@ def run(quick: bool = False) -> List[str]:
     # ---- Fig 16: varied slow-tier latency ----------------------------- #
     for c in (1.5, 2.0, 3.0):
         r_tpp = _sim("cache2", "tpp", POLICY_CFG, geom="2:1",
-                     slow_cost=c, steps=steps, measure=measure)
+                     slow_cost=c, steps=steps, measure=measure, engine=engine)
         r_lin = _sim("cache2", "linux", POLICY_CFG, geom="2:1",
-                     slow_cost=c, steps=steps, measure=measure)
+                     slow_cost=c, steps=steps, measure=measure, engine=engine)
         out.append(
             f"fig16/slow_cost_{c},0.0,"
             f"tpp={r_tpp.throughput_vs_ideal:.4f};"
@@ -55,7 +57,8 @@ def run(quick: bool = False) -> List[str]:
     # ---- Fig 17: decoupled allocation/reclamation --------------------- #
     for dec in (True, False):
         cfg = TppConfig(demote_budget=512, promote_budget=256, sample_rate=0.1, decoupled=dec)
-        r = _sim("web", "tpp", cfg, steps=steps, measure=measure)
+        r = _sim("web", "tpp", cfg, steps=steps, measure=measure,
+                 engine=engine)
         alloc_fast = np.array(r.alloc_fast_rate)
         p95 = float(np.percentile(alloc_fast, 95)) if len(alloc_fast) else 0.0
         out.append(
@@ -69,7 +72,8 @@ def run(quick: bool = False) -> List[str]:
     for filt in (True, False):
         cfg = TppConfig(demote_budget=512, promote_budget=256,
                         sample_rate=0.1, active_lru_filter=filt)
-        r = _sim("cache1", "tpp", cfg, steps=steps, measure=measure)
+        r = _sim("cache1", "tpp", cfg, steps=steps, measure=measure,
+                 engine=engine)
         base[filt] = r
         out.append(
             f"fig18/active_lru_{filt},0.0,"

@@ -3,13 +3,21 @@
 Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+                                          [--engine reference|vectorized]
+
+``--engine`` selects the placement engine for the simulator-backed
+benchmarks (results are identical by construction — see
+``tests/test_engine_parity.py``; the vectorized engine is the fast one).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
+
+from repro.core.engine import ENGINES
 
 MODULES = [
     ("table1", "benchmarks.table1_throughput"),
@@ -18,6 +26,7 @@ MODULES = [
     ("table2", "benchmarks.table2_type_aware"),
     ("table3", "benchmarks.table3_tmo"),
     ("expert_tier", "benchmarks.expert_tiering"),
+    ("engine", "benchmarks.engine_bench"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -29,6 +38,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                          + ",".join(k for k, _ in MODULES))
+    ap.add_argument("--engine", default="reference", choices=list(ENGINES),
+                    help="placement engine for simulator-backed benchmarks")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -39,9 +50,12 @@ def main() -> None:
     for key, modname in MODULES:
         if only and key not in only:
             continue
-        mod = importlib.import_module(modname)
         try:
-            for line in mod.run(quick=args.quick):
+            mod = importlib.import_module(modname)
+            kwargs = {"quick": args.quick}
+            if "engine" in inspect.signature(mod.run).parameters:
+                kwargs["engine"] = args.engine
+            for line in mod.run(**kwargs):
                 print(line, flush=True)
         except Exception as e:  # keep the suite going; a failure is visible
             print(f"{key}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)

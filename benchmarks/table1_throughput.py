@@ -28,7 +28,7 @@ ROWS = [
 ]
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, engine: str = "reference") -> List[str]:
     steps = 80 if quick else STEPS
     measure = 50 if quick else MEASURE_FROM
     out = []
@@ -38,7 +38,7 @@ def run(quick: bool = False) -> List[str]:
         res = run_policy_comparison(
             workload, fast, slow, steps=steps, policies=POLICIES,
             seed=SEED, slow_cost=SLOW_COST, config=POLICY_CFG,
-            total_pages=total, measure_from=measure,
+            total_pages=total, measure_from=measure, engine=engine,
         )
         dt_us = (time.time() - t0) * 1e6 / steps
         for pol in (*POLICIES, "ideal"):

@@ -21,7 +21,7 @@ from repro.core.trace import make_trace
 ROWS = [("web", "2:1"), ("cache1", "1:4"), ("cache2", "1:4")]
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, engine: str = "reference") -> List[str]:
     steps = 100 if quick else STEPS
     measure = 60 if quick else MEASURE_FROM
     out = []
@@ -33,7 +33,8 @@ def run(quick: bool = False) -> List[str]:
             sim = TieredSimulator(wl, "tpp", fast, slow, config=cfg,
                                   slow_cost=SLOW_COST, seed=SEED,
                                   trace=make_trace(wl, seed=SEED,
-                                                   total_pages=total))
+                                                   total_pages=total),
+                                  engine=engine)
             r = sim.run(steps, measure_from=measure)
             dt_us = (time.time() - t0) * 1e6 / steps
             migrations = r.vmstat.pgdemote_total + r.vmstat.pgpromote_total

@@ -41,11 +41,13 @@ class TmoReclaimer:
             self.evicted += 1
 
 
-def _run(wl: str, policy: str, tmo: bool, steps: int, measure: int):
+def _run(wl: str, policy: str, tmo: bool, steps: int, measure: int,
+         engine: str = "reference"):
     fast, slow, total = GEOM["2:1"]
     sim = TieredSimulator(wl, policy, fast, slow, config=POLICY_CFG,
                           slow_cost=SLOW_COST, seed=SEED,
-                          trace=make_trace(wl, seed=SEED, total_pages=total))
+                          trace=make_trace(wl, seed=SEED, total_pages=total),
+                          engine=engine)
     reclaimer = TmoReclaimer(sim.pool) if tmo else None
     # interleave: run in windows, let TMO act between them
     refaults = 0
@@ -59,7 +61,7 @@ def _run(wl: str, policy: str, tmo: bool, steps: int, measure: int):
     return vs, saved
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, engine: str = "reference") -> List[str]:
     steps = 100 if quick else STEPS
     measure = 60 if quick else MEASURE_FROM
     out = []
@@ -69,7 +71,7 @@ def run(quick: bool = False) -> List[str]:
         ("linux", True, "tmo_only"),
     ]:
         t0 = time.time()
-        vs, saved = _run("web", policy, tmo, steps, measure)
+        vs, saved = _run("web", policy, tmo, steps, measure, engine=engine)
         dt_us = (time.time() - t0) * 1e6 / steps
         out.append(
             f"table3/{label},{dt_us:.1f},"

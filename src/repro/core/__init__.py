@@ -4,18 +4,48 @@ Public surface:
 
 * :class:`~repro.core.types.TppConfig`, :class:`~repro.core.types.Tier`,
   :class:`~repro.core.types.PageType` — configuration & enums.
-* :class:`~repro.core.page_pool.PagePool` — two-tier pool + LRU + watermarks.
-* :class:`~repro.core.tpp.TppPolicy` / :func:`~repro.core.tpp.make_policy`
-  — the paper's policy and its baselines.
+* :class:`~repro.core.page_pool.PagePool` — two-tier pool + LRU + watermarks
+  (the reference engine / executable specification).
+* :class:`~repro.core.engine.VectorPagePool` — the struct-of-arrays
+  vectorized engine (same semantics, fleet-scale throughput) and
+  :func:`~repro.core.engine.make_pool` — engine factory.
+* :class:`~repro.core.policy.PlacementPolicy` /
+  :func:`~repro.core.policy.make_policy` — the uniform policy protocol
+  and registry; :class:`~repro.core.tpp.TppPolicy` and the baselines
+  implement it.
 * :class:`~repro.core.chameleon.Chameleon` — the §3 profiler.
-* :class:`~repro.core.simulator.TieredSimulator` — trace-driven harness.
+* :class:`~repro.core.simulator.TieredSimulator` — trace-driven harness
+  (``engine="reference" | "vectorized"``).
+* :class:`~repro.core.trace.MultiTenantTrace` — co-running-workload
+  trace mixer with per-tenant attribution (``make_trace("web+cache1")``).
 """
 
 from repro.core.chameleon import Chameleon
+from repro.core.engine import PageView, VectorPagePool, make_pool
 from repro.core.page_pool import Page, PagePool
-from repro.core.simulator import SimResult, TieredSimulator, run_policy_comparison
-from repro.core.tpp import StepReport, TppPolicy, make_policy
-from repro.core.trace import WORKLOADS, TraceGenerator, make_trace
+from repro.core.policy import (
+    POLICY_REGISTRY,
+    PlacementPolicy,
+    StepReport,
+    make_policy,
+    register_policy,
+)
+from repro.core.simulator import (
+    ENGINES,
+    SimResult,
+    TieredSimulator,
+    run_policy_comparison,
+)
+from repro.core.tpp import TppPolicy
+from repro.core.trace import (
+    WORKLOADS,
+    MultiTenantTrace,
+    ReplayTrace,
+    TraceGenerator,
+    make_trace,
+    record_trace,
+    workload_total_pages,
+)
 from repro.core.types import (
     DemoteFail,
     PageFlags,
@@ -29,11 +59,17 @@ from repro.core.vmstat import VmStat
 __all__ = [
     "Chameleon",
     "DemoteFail",
+    "ENGINES",
+    "MultiTenantTrace",
+    "POLICY_REGISTRY",
     "Page",
     "PagePool",
     "PageFlags",
     "PageType",
+    "PageView",
+    "PlacementPolicy",
     "PromoteFail",
+    "ReplayTrace",
     "SimResult",
     "StepReport",
     "Tier",
@@ -41,9 +77,14 @@ __all__ = [
     "TppConfig",
     "TppPolicy",
     "TraceGenerator",
+    "VectorPagePool",
     "VmStat",
     "WORKLOADS",
     "make_policy",
+    "make_pool",
     "make_trace",
+    "record_trace",
+    "register_policy",
     "run_policy_comparison",
+    "workload_total_pages",
 ]

@@ -1,8 +1,10 @@
 """The paper's comparison systems (§6, Table 1), as pluggable policies.
 
-Every baseline drives the *same* :class:`PagePool` and data plane as TPP —
-only the placement logic differs, mirroring how the paper swaps kernels on
-identical hardware.
+Every baseline implements the :class:`~repro.core.policy.PlacementPolicy`
+protocol and drives the *same* pool and data plane as TPP — only the
+placement logic differs, mirroring how the paper swaps kernels on
+identical hardware.  All policies run unchanged against the reference
+``PagePool`` and the vectorized ``VectorPagePool``.
 
 * ``DefaultLinuxPolicy`` — unmodified Linux on a tiered system: local-first
   allocation with overflow to the CXL node, **no migration in either
@@ -26,26 +28,29 @@ identical hardware.
 
 from __future__ import annotations
 
-import random
-from typing import List, Sequence
+from typing import Sequence
 
-from repro.core.page_pool import PagePool
-from repro.core.tpp import StepReport
+import numpy as np
+
+from repro.core.policy import PlacementPool, StepReport, register_policy
 from repro.core.types import (
-    DemoteFail,
-    PageFlags,
     PromoteFail,
     Tier,
 )
 
 
+@register_policy
 class DefaultLinuxPolicy:
     name = "linux"
 
-    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+    def __init__(self, pool: PlacementPool, seed: int = 0) -> None:
         self.pool = pool
 
-    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+    def step(
+        self,
+        slow_hits: Sequence[int] = (),
+        fast_hits: Sequence[int] = (),
+    ) -> StepReport:
         # No demotion, no promotion.  LRU aging still happens (the kernel
         # always ages), it just never feeds a migration.
         self.pool.age_active(Tier.FAST)
@@ -53,17 +58,22 @@ class DefaultLinuxPolicy:
         return StepReport()
 
 
+@register_policy
 class NumaBalancingPolicy:
     name = "numa_balancing"
 
-    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+    def __init__(self, pool: PlacementPool, seed: int = 0) -> None:
         self.pool = pool
-        self._rng = random.Random(seed)
+        self._rng = np.random.default_rng(seed)
         self.sample_rate = pool.config.sample_rate
         # Extra overhead accounting: AutoNUMA samples the fast tier too.
         self.wasted_fast_faults = 0
 
-    def step(self, slow_hits: Sequence[int] = (), fast_hits: Sequence[int] = ()) -> StepReport:
+    def step(
+        self,
+        slow_hits: Sequence[int] = (),
+        fast_hits: Sequence[int] = (),
+    ) -> StepReport:
         pool = self.pool
         report = StepReport()
         # Fast-tier sampling achieves nothing on a two-tier system (there
@@ -71,15 +81,15 @@ class NumaBalancingPolicy:
         # "unnecessary sampling, 2% higher CPU overhead than TPP").
         self.wasted_fast_faults += len(fast_hits)
 
+        if self.sample_rate < 1.0 and len(slow_hits):
+            keep = self._rng.random(len(slow_hits)) < self.sample_rate
+            slow_hits = [pid for pid, k in zip(slow_hits, keep) if k]
         for pid in slow_hits:
-            if self.sample_rate < 1.0 and self._rng.random() >= self.sample_rate:
-                continue
-            page = pool.pages.get(pid)
-            if page is None or page.tier != Tier.SLOW:
+            if not pool.is_slow_live(pid):
                 continue
             pool.vmstat.pgpromote_sampled += 1
             pool.vmstat.pgpromote_candidate += 1  # instant: every fault
-            if page.demoted:
+            if pool.is_demoted(pid):
                 pool.vmstat.pgpromote_candidate_demoted += 1
             # Upstream NUMA balancing respects the watermark — with no
             # demotion path there is no headroom, so this is the stall.
@@ -97,6 +107,7 @@ class NumaBalancingPolicy:
         return report
 
 
+@register_policy
 class AutoTieringPolicy:
     name = "autotiering"
 
@@ -106,7 +117,7 @@ class AutoTieringPolicy:
     # which a slow page is considered hot enough to promote.
     HOT_FREQ = 2
 
-    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+    def __init__(self, pool: PlacementPool, seed: int = 0) -> None:
         self.pool = pool
         self.reserve = max(1, int(self.RESERVE_FRACTION * pool.num_frames[Tier.FAST]))
         self._reserve_left = self.reserve
@@ -118,32 +129,28 @@ class AutoTieringPolicy:
         if need <= 0:
             return
         # Frequency-based victim selection: lowest touch_count first.
-        victims = sorted(
-            (p for p in pool.pages.values()
-             if p.tier == Tier.FAST and not p.pinned),
-            key=lambda p: (p.touch_count, p.last_touch_step),
-        )[: min(need, pool.config.demote_budget)]
-        for page in victims:
-            res = pool.demote_page(page.pid)
-            if res == DemoteFail.NONE:
-                report.demoted += 1
-                # Coupled path: demotions replenish the promotion reserve.
-                self._reserve_left = min(self.reserve, self._reserve_left + 1)
-            else:
-                report.demote_failed += 1
+        victims = pool.demotion_victims(min(need, pool.config.demote_budget))
+        n_ok, overflow, n_failed = pool.demote_pages(victims)
+        report.demoted += n_ok
+        # Coupled path: demotions replenish the promotion reserve.
+        self._reserve_left = min(self.reserve, self._reserve_left + n_ok)
+        report.demote_failed += len(overflow) + n_failed
 
-    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+    def step(
+        self,
+        slow_hits: Sequence[int] = (),
+        fast_hits: Sequence[int] = (),
+    ) -> StepReport:
         pool = self.pool
         report = StepReport()
         for pid in slow_hits:
-            page = pool.pages.get(pid)
-            if page is None or page.tier != Tier.SLOW:
+            if not pool.is_slow_live(pid):
                 continue
             pool.vmstat.pgpromote_sampled += 1
-            if page.touch_count < self.HOT_FREQ:
+            if pool.touch_count_of(pid) < self.HOT_FREQ:
                 continue  # timer/frequency filter
             pool.vmstat.pgpromote_candidate += 1
-            if page.demoted:
+            if pool.is_demoted(pid):
                 pool.vmstat.pgpromote_candidate_demoted += 1
             under_pressure = pool.free_frames(Tier.FAST) <= pool.wm_min
             if under_pressure and self._reserve_left <= 0:
@@ -170,12 +177,13 @@ class AutoTieringPolicy:
         return report
 
 
+@register_policy
 class IdealPolicy:
     """All memory in the fast tier (the paper's normalization baseline)."""
 
     name = "ideal"
 
-    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+    def __init__(self, pool: PlacementPool, seed: int = 0) -> None:
         self.pool = pool
         if pool.num_frames[Tier.SLOW] != 0:
             raise ValueError(
@@ -183,7 +191,11 @@ class IdealPolicy:
                 ">= working set (that is the baseline's definition)"
             )
 
-    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
-        assert not slow_hits, "ideal baseline must never see slow hits"
+    def step(
+        self,
+        slow_hits: Sequence[int] = (),
+        fast_hits: Sequence[int] = (),
+    ) -> StepReport:
+        assert not len(slow_hits), "ideal baseline must never see slow hits"
         self.pool.step += 1
         return StepReport()

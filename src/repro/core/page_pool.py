@@ -219,6 +219,12 @@ class PagePool:
         page.flags |= PageFlags.ACCESSED
         return page.tier
 
+    def touch_many(self, pids: Sequence[int]) -> np.ndarray:
+        """Batched :meth:`touch`; returns the serving tier per page."""
+        return np.fromiter(
+            (int(self.touch(int(p))) for p in pids), np.int8, count=len(pids)
+        )
+
     def _activate(self, page: Page) -> None:
         node = self.lru[page.tier]
         node.list_for(page.page_type, False).remove(page.pid)
@@ -226,6 +232,15 @@ class PagePool:
         page.flags |= PageFlags.ACTIVE
         page.flags &= ~PageFlags.ACCESSED
         self.vmstat.pgactivate += 1
+
+    def activate(self, pid: int) -> None:
+        """Move an inactive page to its tier's active list (public API).
+
+        This is the kernel's ``activate_page`` — policies use it for the
+        promotion-hysteresis path (Fig. 13 step ②) instead of reaching
+        into the LRU internals.
+        """
+        self._activate(self.pages[pid])
 
     def deactivate(self, page: Page) -> None:
         node = self.lru[page.tier]
@@ -325,6 +340,18 @@ class PagePool:
         self.vmstat.promote_success(page.page_type == PageType.ANON)
         return PromoteFail.NONE
 
+    def demote_pages(self, pids: Sequence[int]) -> Tuple[int, List[int], int]:
+        """Apply a batch of demotions; ``(n_demoted, overflow_pids, n_failed)``.
+
+        Exactly equivalent to calling :meth:`demote_page` per pid in
+        order: successes while the slow tier has frames, ``SLOW_FULL``
+        failures (counted in vmstat here) returned as ``overflow_pids``
+        for the caller's per-page fallback (evict), and other failures
+        (pinned) tallied in ``n_failed``.  The vectorized pool overrides
+        this with an array-batched implementation.
+        """
+        return demote_pages_sequential(self, pids)
+
     def evict_page(self, pid: int) -> None:
         """Reclaim a page entirely (swap-out analogue; §5.1 fallback)."""
         page = self.pages[pid]
@@ -380,6 +407,60 @@ class PagePool:
         return out
 
     # ------------------------------------------------------------------ #
+    # accessor surface (repro.core.policy.PlacementPool)
+    # ------------------------------------------------------------------ #
+    def has_page(self, pid: int) -> bool:
+        return pid in self.pages
+
+    def live_mask(self, pids: Sequence[int]) -> np.ndarray:
+        return np.fromiter(
+            (int(p) in self.pages for p in pids), bool, count=len(pids)
+        )
+
+    def tier_of(self, pid: int) -> Tier:
+        return self.pages[pid].tier
+
+    def is_slow_live(self, pid: int) -> bool:
+        """Live and slow-tier — the promotion loops' per-candidate gate."""
+        page = self.pages.get(pid)
+        return page is not None and page.tier == Tier.SLOW
+
+    def ptype_of(self, pid: int) -> PageType:
+        return self.pages[pid].page_type
+
+    def is_active(self, pid: int) -> bool:
+        return self.pages[pid].active
+
+    def is_demoted(self, pid: int) -> bool:
+        return self.pages[pid].demoted
+
+    def is_pinned(self, pid: int) -> bool:
+        return self.pages[pid].pinned
+
+    def touch_count_of(self, pid: int) -> int:
+        return self.pages[pid].touch_count
+
+    def demotion_victims(self, limit: int) -> List[int]:
+        """Coldest unpinned fast-tier pages by (touch_count, recency).
+
+        Frequency-ranked victim selection (AutoTiering's demotion rule).
+        Stable order: ties break by allocation order (ascending pid).
+        """
+        victims = sorted(
+            (p for p in self.pages.values()
+             if p.tier == Tier.FAST and not p.pinned),
+            key=lambda p: (p.touch_count, p.last_touch_step),
+        )[:limit]
+        return [p.pid for p in victims]
+
+    def fallback_slow_victim(self) -> Optional[int]:
+        """Any unpinned slow page (OOM last resort), oldest pid first."""
+        for p in self.pages.values():
+            if p.tier == Tier.SLOW and not p.pinned:
+                return p.pid
+        return None
+
+    # ------------------------------------------------------------------ #
     # introspection
     # ------------------------------------------------------------------ #
     def pages_in_tier(self, tier: Tier) -> List[int]:
@@ -419,3 +500,24 @@ class PagePool:
             assert len(free) == len(self._free[tier]), "free list duplicates"
             assert not (free & seen_frames[tier]), "frame both free and mapped"
             assert len(free) + len(seen_frames[tier]) == self.num_frames[tier]
+
+
+def demote_pages_sequential(pool, pids: Sequence[int]) -> Tuple[int, List[int], int]:
+    """Per-pid demotion sequence shared by both pool engines.
+
+    This loop *is* the batch-demotion semantics: the vectorized pool
+    falls back to it whenever exactness demands per-page interleaving
+    (migration hooks, pinned pages).
+    """
+    n_ok = 0
+    n_failed = 0
+    overflow: List[int] = []
+    for pid in pids:
+        res = pool.demote_page(pid)
+        if res == DemoteFail.NONE:
+            n_ok += 1
+        elif res == DemoteFail.SLOW_FULL:
+            overflow.append(pid)
+        else:
+            n_failed += 1
+    return n_ok, overflow, n_failed

@@ -1,15 +1,28 @@
 """Tier-faithful placement simulator.
 
-Runs a synthetic workload trace (``repro.core.trace``) against a
-:class:`PagePool` driven by any placement policy (TPP or a baseline) and
-charges modeled access costs per tier — the CPU-only stand-in for the
-paper's production runs (§6).  The *mechanism* is exact (real pool, real
-LRU, real migrations); only the clock is modeled:
+Runs a synthetic workload trace (``repro.core.trace``) against a page
+pool driven by any placement policy (TPP or a baseline) and charges
+modeled access costs per tier — the CPU-only stand-in for the paper's
+production runs (§6).  The *mechanism* is exact (real pool, real LRU,
+real migrations); only the clock is modeled:
 
 * fast-tier access  = 1.0 (local DRAM ~100 ns)
 * slow-tier access  = ``slow_cost`` (paper Fig. 2: CXL ≈ 1.5-3×)
 * migration         = ``migrate_cost`` per page (background, amortized)
 * refault (evicted) = ``refault_cost`` (major fault + swap-in analogue)
+
+Two execution engines share the same semantics (``engine=``):
+
+* ``reference``  — the dict-of-``Page`` :class:`PagePool` with a
+  per-event Python loop (the executable specification);
+* ``vectorized`` — the struct-of-arrays
+  :class:`~repro.core.engine.VectorPagePool` with batched allocation,
+  touch and interval handling (the production-scale engine; ≥10× the
+  reference throughput on fleet-scale traces, bit-identical results).
+
+Multi-tenant traces (``"web+cache1"``) run through either engine; the
+simulator attributes per-tenant vmstat-style counters (fast/slow
+accesses, allocations, refaults) via the trace's tenant encoding.
 
 Throughput is reported normalized to the ideal all-fast baseline exactly
 like the paper's Table 1 (accesses per unit modeled time, ideal = 1.0).
@@ -23,9 +36,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.chameleon import Chameleon
-from repro.core.page_pool import PagePool
-from repro.core.tpp import make_policy
-from repro.core.trace import WORKLOADS, TraceGenerator, make_trace
+from repro.core.engine import ENGINES, make_pool
+from repro.core.policy import make_policy
+from repro.core.trace import make_trace, workload_total_pages
 from repro.core.types import PageType, Tier, TppConfig
 from repro.core.vmstat import VmStat
 
@@ -49,6 +62,10 @@ class SimResult:
     # even with most traffic remote at 2-3× latency (Table 1), i.e. they
     # are far from 100% memory-bound; β captures that (MLP/compute overlap).
     mem_stall_frac: float = 0.25
+    # Per-tenant vmstat attribution (multi-tenant traces only):
+    # tenant id -> {"access_fast", "access_slow", "allocated", "refaults"}.
+    per_tenant: Optional[Dict[int, Dict[str, int]]] = None
+    tenant_names: Optional[List[str]] = None
 
     @property
     def avg_access_cost(self) -> float:
@@ -87,6 +104,25 @@ class SimResult:
             "alloc_stalls": self.vmstat.pgalloc_stall,
         }
 
+    def tenant_summary(self) -> Optional[Dict[str, Dict[str, float]]]:
+        """Per-tenant local fractions keyed by tenant display name."""
+        if self.per_tenant is None:
+            return None
+        out: Dict[str, Dict[str, float]] = {}
+        for tid, acc in sorted(self.per_tenant.items()):
+            name = (
+                f"{tid}:{self.tenant_names[tid]}"
+                if self.tenant_names and tid < len(self.tenant_names)
+                else str(tid)
+            )
+            total = acc["access_fast"] + acc["access_slow"]
+            out[name] = {
+                **acc,
+                "local_fraction": round(acc["access_fast"] / total, 4)
+                if total else 1.0,
+            }
+        return out
+
 
 class TieredSimulator:
     """Drive (trace × pool × policy) and account modeled time."""
@@ -104,26 +140,47 @@ class TieredSimulator:
         interval_steps: int = 4,
         seed: int = 0,
         profiler: Optional[Chameleon] = None,
-        trace: Optional[TraceGenerator] = None,
+        trace=None,
+        engine: str = "reference",
     ) -> None:
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
         self.workload = workload
         self.policy_name = policy
+        self.engine = engine
         self.slow_cost = slow_cost
         self.migrate_cost = migrate_cost
         self.refault_cost = refault_cost
         self.interval_steps = interval_steps
-        self.pool = PagePool(fast_frames, slow_frames, config=config)
+        self.pool = make_pool(engine, fast_frames, slow_frames, config=config)
         self.policy = make_policy(policy, self.pool, seed=seed)
-        self.trace = trace or make_trace(workload, seed=seed)
+        self.trace = trace if trace is not None else make_trace(workload, seed=seed)
         self.profiler = profiler
-        # trace-local index -> pid (None if evicted)
+        # tenant attribution (multi-tenant traces expose tenant_of)
+        self._tenant_of = getattr(self.trace, "tenant_of", None)
+        self._tenant_of_array = getattr(self.trace, "tenant_of_array", None)
+        self._per_tenant: Dict[int, Dict[str, int]] = {}
+        # reference engine: trace-local index -> pid (None if evicted)
         self._pid_of: Dict[int, Optional[int]] = {}
         self._ptype_of: Dict[int, PageType] = {}
+        # vectorized engine: the same maps as flat arrays (−1 = absent)
+        self._v_pid_of = np.full(1024, -1, np.int64)
+        self._v_ptype_of = np.full(1024, -1, np.int16)
         self._evicted_pids: set = set()
+        self._last_evicted: Optional[int] = None
         self.pool.on_evict = self._note_evict
 
     def _note_evict(self, pid: int) -> None:
         self._evicted_pids.add(pid)
+        self._last_evicted = pid
+
+    def _tenant_acc(self, tid: int) -> Dict[str, int]:
+        acc = self._per_tenant.get(tid)
+        if acc is None:
+            acc = {"access_fast": 0, "access_slow": 0,
+                   "allocated": 0, "refaults": 0}
+            self._per_tenant[tid] = acc
+        return acc
 
     # ---------------------------------------------------------------- #
     def run(self, steps: int, measure_from: int = 0) -> SimResult:
@@ -133,6 +190,14 @@ class TieredSimulator:
         (§6.1: convergence takes minutes); ``measure_from`` excludes the
         warm-up transient the same way.
         """
+        if self.engine == "vectorized":
+            return self._run_vectorized(steps, measure_from)
+        return self._run_reference(steps, measure_from)
+
+    # ---------------------------------------------------------------- #
+    # reference engine: per-event loop over the dict-of-Page pool
+    # ---------------------------------------------------------------- #
+    def _run_reference(self, steps: int, measure_from: int) -> SimResult:
         modeled_time = 0.0
         ideal_time = 0.0
         total_accesses = 0
@@ -140,6 +205,7 @@ class TieredSimulator:
         promote_rate: List[int] = []
         demote_rate: List[int] = []
         alloc_fast_rate: List[int] = []
+        tenant_of = self._tenant_of
 
         for step_no in range(steps):
             ev = next(self.trace)
@@ -171,6 +237,8 @@ class TieredSimulator:
                 if pid is None or pid not in self.pool.pages:
                     # refault: page was evicted → recreate (major fault)
                     step_time += self.refault_cost
+                    if tenant_of is not None:
+                        self._tenant_acc(tenant_of(idx))["refaults"] += 1
                     self._alloc_idx(idx, self._ptype_of[idx])
                     pid = self._pid_of[idx]
                 tier = self.pool.touch(pid)
@@ -180,17 +248,17 @@ class TieredSimulator:
                 else:
                     step_time += 1.0
                     fast_hits.append(pid)
+                if tenant_of is not None:
+                    acc = self._tenant_acc(tenant_of(idx))
+                    acc["access_slow" if tier == Tier.SLOW else "access_fast"] += 1
                 step_ideal += 1.0
                 if self.profiler is not None:
                     prof_events.append((pid, self.pool.pages[pid].page_type))
             if self.profiler is not None:
                 self.profiler.record(prof_events)
 
-            # -- policy ---------------------------------------------- #
-            if self.policy_name == "numa_balancing":
-                report = self.policy.step(slow_hits, fast_hits)  # type: ignore[call-arg]
-            else:
-                report = self.policy.step(slow_hits)
+            # -- policy (uniform protocol dispatch) ------------------- #
+            report = self.policy.step(slow_hits, fast_hits)
             step_time += (report.demoted + report.promoted) * self.migrate_cost
             if step_no >= measure_from:
                 modeled_time += step_time
@@ -210,6 +278,226 @@ class TieredSimulator:
                 if self.profiler is not None:
                     self.profiler.end_interval()
 
+        return self._result(steps, total_accesses, modeled_time, ideal_time,
+                            local_frac, promote_rate, demote_rate,
+                            alloc_fast_rate)
+
+    # ---------------------------------------------------------------- #
+    # vectorized engine: batched step processing over the SoA pool
+    # ---------------------------------------------------------------- #
+    def _ensure_idx_capacity(self, max_idx: int) -> None:
+        if max_idx < len(self._v_pid_of):
+            return
+        new_cap = max(max_idx + 1, 2 * len(self._v_pid_of))
+        pid_of = np.full(new_cap, -1, np.int64)
+        pid_of[: len(self._v_pid_of)] = self._v_pid_of
+        ptype_of = np.full(new_cap, -1, np.int16)
+        ptype_of[: len(self._v_ptype_of)] = self._v_ptype_of
+        self._v_pid_of = pid_of
+        self._v_ptype_of = ptype_of
+
+    def _alloc_idx_vec(self, idx: int, ptype: PageType) -> int:
+        """Scalar allocation with the eviction-retry OOM handler."""
+        try:
+            page = self.pool.allocate(ptype)
+        except MemoryError:
+            victim = self._coldest_slow_page()
+            if victim is None:
+                raise
+            self.pool.evict_page(victim)
+            page = self.pool.allocate(ptype)
+        self._ensure_idx_capacity(idx)
+        self._v_pid_of[idx] = page.pid
+        self._v_ptype_of[idx] = int(ptype)
+        if self._tenant_of is not None:
+            self._tenant_acc(self._tenant_of(idx))["allocated"] += 1
+        return page.pid
+
+    def _run_vectorized(self, steps: int, measure_from: int) -> SimResult:
+        pool = self.pool
+        modeled_time = 0.0
+        ideal_time = 0.0
+        total_accesses = 0
+        local_frac: List[float] = []
+        promote_rate: List[int] = []
+        demote_rate: List[int] = []
+        alloc_fast_rate: List[int] = []
+        slow_tier = np.int8(int(Tier.SLOW))
+        tenant_arr = self._tenant_of_array
+        n_tenants = getattr(self.trace, "n_tenants", 1)
+
+        for step_no in range(steps):
+            ev = next(self.trace)
+            alloc_fast_before = pool.vmstat.pgalloc_fast
+
+            # -- allocations: batch runs of equal page type ----------- #
+            allocs = ev.allocs
+            i = 0
+            n_allocs = len(allocs)
+            while i < n_allocs:
+                pt = allocs[i][1]
+                j = i + 1
+                while j < n_allocs and allocs[j][1] == pt:
+                    j += 1
+                run_idx = np.fromiter(
+                    (a[0] for a in allocs[i:j]), np.int64, count=j - i
+                )
+                placed = pool.try_allocate_many(pt, j - i)
+                if placed is None:
+                    # near-OOM: per-page path owns the eviction-retry
+                    for a in allocs[i:j]:
+                        self._alloc_idx_vec(a[0], pt)
+                else:
+                    pids, _tiers = placed
+                    self._ensure_idx_capacity(int(run_idx.max()))
+                    self._v_pid_of[run_idx] = pids
+                    self._v_ptype_of[run_idx] = np.int16(int(pt))
+                    if tenant_arr is not None:
+                        tids = np.bincount(
+                            tenant_arr(run_idx), minlength=n_tenants
+                        )
+                        for tid in np.flatnonzero(tids):
+                            self._tenant_acc(int(tid))["allocated"] += int(tids[tid])
+                i = j
+
+            # -- frees ----------------------------------------------- #
+            for idx in ev.frees:
+                if idx >= len(self._v_pid_of):
+                    continue  # never allocated (reference: dict.pop no-op)
+                pid = int(self._v_pid_of[idx])
+                self._v_pid_of[idx] = -1
+                self._v_ptype_of[idx] = -1
+                if pid >= 0 and pool.has_page(pid):
+                    if self.profiler is not None:
+                        self.profiler.note_free(pid)
+                    pool.free(pid)
+
+            # -- accesses: batched touch with scalar refault repair --- #
+            step_time = 0.0
+            step_ideal = 0.0
+            slow_parts: List[np.ndarray] = []
+            fast_parts: List[np.ndarray] = []
+            prof_events = []
+            idxs = np.fromiter(ev.accesses, np.int64, count=len(ev.accesses))
+            if len(idxs):
+                # unknown or freed-before-access indices are skipped, same
+                # as the reference `idx not in self._ptype_of` guard
+                idxs = idxs[idxs < len(self._v_ptype_of)]
+            if len(idxs):
+                idxs = idxs[self._v_ptype_of[idxs] >= 0]
+            # Liveness is gathered ONCE per step; a refault only changes
+            # the refaulted index (new pid) and — when its allocation had
+            # to evict a victim — that one victim pid.  Both are patched
+            # into the prefetched arrays with cheap vector compares, so
+            # per-step cost stays linear in accesses even when the trace
+            # is refault-heavy (the reference loop's behaviour, batched).
+            pids = self._v_pid_of[idxs] if len(idxs) else idxs
+            alive = (
+                (pids >= 0) & pool.live_mask(np.maximum(pids, 0))
+                if len(idxs) else np.empty(0, bool)
+            )
+            pos = 0
+            n_idx = len(idxs)
+            while pos < n_idx:
+                rest = alive[pos:]
+                n_chunk = len(rest) if rest.all() else int(np.argmin(rest))
+                if n_chunk:
+                    chunk_idx = idxs[pos : pos + n_chunk]
+                    chunk_pids = pids[pos : pos + n_chunk]
+                    tiers = pool.touch_many(chunk_pids)
+                    slow_sel = tiers == slow_tier
+                    n_slow = int(np.count_nonzero(slow_sel))
+                    slow_parts.append(chunk_pids[slow_sel])
+                    fast_parts.append(chunk_pids[~slow_sel])
+                    step_time += n_slow * self.slow_cost + (n_chunk - n_slow)
+                    step_ideal += n_chunk
+                    if tenant_arr is not None:
+                        tids = tenant_arr(chunk_idx)
+                        slow_cnt = np.bincount(tids[slow_sel], minlength=n_tenants)
+                        fast_cnt = np.bincount(tids[~slow_sel], minlength=n_tenants)
+                        for tid in np.flatnonzero(slow_cnt + fast_cnt):
+                            acc = self._tenant_acc(int(tid))
+                            acc["access_slow"] += int(slow_cnt[tid])
+                            acc["access_fast"] += int(fast_cnt[tid])
+                    if self.profiler is not None:
+                        for p in chunk_pids.tolist():
+                            prof_events.append((p, pool.ptype_of(p)))
+                    pos += n_chunk
+                if pos < n_idx and not alive[pos]:
+                    # refault: page was evicted → recreate (major fault)
+                    idx = int(idxs[pos])
+                    step_time += self.refault_cost
+                    if self._tenant_of is not None:
+                        self._tenant_acc(self._tenant_of(idx))["refaults"] += 1
+                    self._last_evicted = None
+                    pid = self._alloc_idx_vec(idx, PageType(int(self._v_ptype_of[idx])))
+                    if pos + 1 < n_idx:
+                        # patch the prefetched suffix: this index now maps
+                        # to the new live pid ...
+                        same_idx = idxs[pos + 1 :] == idx
+                        pids[pos + 1 :][same_idx] = pid
+                        alive[pos + 1 :][same_idx] = True
+                        # ... and the eviction victim (if any) went dead
+                        if self._last_evicted is not None:
+                            alive[pos + 1 :][
+                                pids[pos + 1 :] == self._last_evicted
+                            ] = False
+                    tier = pool.touch(pid)
+                    if tier == Tier.SLOW:
+                        step_time += self.slow_cost
+                        slow_parts.append(np.asarray([pid], np.int64))
+                    else:
+                        step_time += 1.0
+                        fast_parts.append(np.asarray([pid], np.int64))
+                    if self._tenant_of is not None:
+                        acc = self._tenant_acc(self._tenant_of(idx))
+                        acc["access_slow" if tier == Tier.SLOW
+                            else "access_fast"] += 1
+                    step_ideal += 1.0
+                    if self.profiler is not None:
+                        prof_events.append((pid, pool.ptype_of(pid)))
+                    pos += 1
+            if self.profiler is not None:
+                self.profiler.record(prof_events)
+
+            slow_hits = (
+                np.concatenate(slow_parts) if slow_parts
+                else np.empty(0, np.int64)
+            )
+            fast_hits = (
+                np.concatenate(fast_parts) if fast_parts
+                else np.empty(0, np.int64)
+            )
+
+            # -- policy (uniform protocol dispatch) ------------------- #
+            report = self.policy.step(slow_hits.tolist(), fast_hits.tolist())
+            step_time += (report.demoted + report.promoted) * self.migrate_cost
+            if step_no >= measure_from:
+                modeled_time += step_time
+                ideal_time += step_ideal
+                total_accesses += len(slow_hits) + len(fast_hits)
+
+            # -- bookkeeping ------------------------------------------ #
+            vs = pool.vmstat
+            step_total = len(slow_hits) + len(fast_hits)
+            local_frac.append(len(fast_hits) / step_total if step_total else 1.0)
+            promote_rate.append(report.promoted)
+            demote_rate.append(report.demoted)
+            alloc_fast_rate.append(vs.pgalloc_fast - alloc_fast_before)
+
+            if (step_no + 1) % self.interval_steps == 0:
+                pool.end_interval()
+                if self.profiler is not None:
+                    self.profiler.end_interval()
+
+        return self._result(steps, total_accesses, modeled_time, ideal_time,
+                            local_frac, promote_rate, demote_rate,
+                            alloc_fast_rate)
+
+    # ---------------------------------------------------------------- #
+    def _result(self, steps, total_accesses, modeled_time, ideal_time,
+                local_frac, promote_rate, demote_rate,
+                alloc_fast_rate) -> SimResult:
         return SimResult(
             policy=self.policy_name,
             workload=self.workload,
@@ -222,6 +510,8 @@ class TieredSimulator:
             promote_rate=promote_rate,
             demote_rate=demote_rate,
             alloc_fast_rate=alloc_fast_rate,
+            per_tenant=self._per_tenant if self._tenant_of is not None else None,
+            tenant_names=getattr(self.trace, "tenant_names", None),
         )
 
     # ---------------------------------------------------------------- #
@@ -238,16 +528,15 @@ class TieredSimulator:
             page = self.pool.allocate(ptype)
         self._pid_of[idx] = page.pid
         self._ptype_of[idx] = ptype
+        if self._tenant_of is not None:
+            self._tenant_acc(self._tenant_of(idx))["allocated"] += 1
 
     def _coldest_slow_page(self) -> Optional[int]:
         cands = self.pool.scan_reclaim_candidates(Tier.SLOW, 1)
         if cands:
             return cands[0]
-        # fall back: any slow page
-        for p in self.pool.pages.values():
-            if p.tier == Tier.SLOW and not p.pinned:
-                return p.pid
-        return None
+        # fall back: any unpinned slow page
+        return self.pool.fallback_slow_victim()
 
 
 def run_policy_comparison(
@@ -261,8 +550,14 @@ def run_policy_comparison(
     config: Optional[TppConfig] = None,
     total_pages: Optional[int] = None,
     measure_from: int = 0,
+    engine: str = "reference",
 ) -> Dict[str, SimResult]:
-    """Run the same trace under each policy + the ideal baseline (Table 1)."""
+    """Run the same trace under each policy + the ideal baseline (Table 1).
+
+    ``workload`` may be a single workload name or a ``+``-joined
+    multi-tenant mix; ``engine`` selects the reference or vectorized
+    placement engine (identical results, different speed).
+    """
     results: Dict[str, SimResult] = {}
     for pol in policies:
         sim = TieredSimulator(
@@ -274,10 +569,11 @@ def run_policy_comparison(
             slow_cost=slow_cost,
             seed=seed,
             trace=make_trace(workload, seed=seed, total_pages=total_pages),
+            engine=engine,
         )
         results[pol] = sim.run(steps, measure_from=measure_from)
     # ideal: all frames fast (sized for live peak incl. churn overshoot)
-    base = total_pages or WORKLOADS[workload].total_pages
+    base = total_pages or workload_total_pages(workload)
     ideal_frames = max(fast_frames + slow_frames, int(1.3 * base)) + 64
     ideal = TieredSimulator(
         workload,
@@ -288,6 +584,7 @@ def run_policy_comparison(
         slow_cost=slow_cost,
         seed=seed,
         trace=make_trace(workload, seed=seed, total_pages=total_pages),
+        engine=engine,
     )
     results["ideal"] = ideal.run(steps, measure_from=measure_from)
     return results

@@ -1,6 +1,8 @@
 """TPP — the paper's transparent page placement policy (§5).
 
-Drives a :class:`~repro.core.page_pool.PagePool` with the four mechanisms:
+Drives any :class:`~repro.core.policy.PlacementPool` (the reference
+``PagePool`` or the vectorized ``VectorPagePool``) with the four
+mechanisms:
 
 1. **Lightweight demotion** (§5.1): reclaim candidates are taken from the
    fast tier's *inactive* LRU tails (both anon and file) and *migrated* to
@@ -18,87 +20,82 @@ Drives a :class:`~repro.core.page_pool.PagePool` with the four mechanisms:
 4. **Page-type-aware allocation** (§5.4): handled by the pool via
    ``TppConfig.file_to_slow``.
 
-The policy exposes one entry point, :meth:`step`, fed with the set of
-slow-tier page hits observed by the data plane this step.  It is a
-host-side control loop — the same role the kernel's kswapd/NUMA-balancing
-tasks play — while the actual payload copies happen in the engine
-(``on_migrate`` hook of the pool).
+The policy implements the uniform
+:class:`~repro.core.policy.PlacementPolicy` protocol: :meth:`step` is fed
+the slow- and fast-tier page hits observed by the data plane this step
+(TPP ignores the fast hits — the paper never samples the local node).
+It is a host-side control loop — the same role the kernel's
+kswapd/NUMA-balancing tasks play — while the actual payload copies happen
+in the engine (``on_migrate`` hook of the pool).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import random
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, Sequence
 
-from repro.core.page_pool import PagePool
+import numpy as np
+
+from repro.core.policy import (
+    PlacementPool,
+    StepReport,
+    make_policy,  # noqa: F401  (re-exported for backward compatibility)
+    register_policy,
+)
 from repro.core.types import (
-    DemoteFail,
-    PageFlags,
-    PageType,
     PromoteFail,
     Tier,
     TppConfig,
 )
 
-
-@dataclasses.dataclass
-class StepReport:
-    """What one policy step did (for benchmarks and tests)."""
-
-    demoted: int = 0
-    promoted: int = 0
-    evicted: int = 0
-    demote_failed: int = 0
-    promote_filtered: int = 0
-    promote_failed: int = 0
+__all__ = ["TppPolicy", "StepReport", "make_policy"]
 
 
+@register_policy
 class TppPolicy:
     """The full TPP mechanism."""
 
     name = "tpp"
 
-    def __init__(self, pool: PagePool, seed: int = 0) -> None:
+    def __init__(self, pool: PlacementPool, seed: int = 0) -> None:
         self.pool = pool
         self.config: TppConfig = pool.config
-        self._rng = random.Random(seed)
+        self._rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------ #
     # promotion path (§5.3)
     # ------------------------------------------------------------------ #
-    def _sample_hint_faults(self, slow_hits: Sequence[int]) -> List[int]:
+    def _sample_hint_faults(self, slow_hits: Sequence[int]) -> Sequence[int]:
         """NUMA-hint-fault sampling, restricted to the slow tier.
 
         The paper limits NUMA Balancing's sampling to CXL nodes only; the
         fast tier is never sampled (no wasted faults on local memory).
+        The keep-mask is drawn in one vectorized call so sampling cost
+        does not scale with per-page Python work.
         """
         rate = self.config.sample_rate
-        if rate >= 1.0:
-            return list(slow_hits)
-        return [pid for pid in slow_hits if self._rng.random() < rate]
+        if rate >= 1.0 or len(slow_hits) == 0:
+            return slow_hits
+        keep = self._rng.random(len(slow_hits)) < rate
+        return [pid for pid, k in zip(slow_hits, keep) if k]
 
     def _promote(self, candidates: Iterable[int], report: StepReport) -> None:
         pool = self.pool
         budget = self.config.promote_budget
         for pid in candidates:
-            page = pool.pages.get(pid)
-            if page is None or page.tier != Tier.SLOW:
+            if not pool.is_slow_live(pid):
                 continue  # freed or already migrated this step
             pool.vmstat.pgpromote_sampled += 1
 
-            if self.config.active_lru_filter and not page.active:
+            if self.config.active_lru_filter and not pool.is_active(pid):
                 # Fig. 13 step ②: activate instead of promoting; the page
                 # must still be hot at its *next* fault to be promoted.
                 pool.vmstat.promote_fail(PromoteFail.NOT_ACTIVE)
                 report.promote_filtered += 1
-                if not page.accessed:
-                    page.flags |= PageFlags.ACCESSED
-                pool._activate(page)
+                pool.activate(pid)
                 continue
 
             pool.vmstat.pgpromote_candidate += 1
-            if page.demoted:
+            if pool.is_demoted(pid):
                 pool.vmstat.pgpromote_candidate_demoted += 1
 
             if report.promoted >= budget:
@@ -147,51 +144,34 @@ class TppPolicy:
         # Age the active lists first so the inactive tails reflect recency.
         pool.age_active(Tier.FAST)
         candidates = pool.scan_reclaim_candidates(Tier.FAST, nr)
-        for pid in candidates:
-            res = pool.demote_page(pid)
-            if res == DemoteFail.NONE:
-                report.demoted += 1
-            elif res == DemoteFail.SLOW_FULL:
-                # §5.1: fall back to default reclamation for that page.
-                page = pool.pages[pid]
-                if not page.pinned:
-                    pool.evict_page(pid)
-                    report.evicted += 1
-                else:
-                    report.demote_failed += 1
+        n_ok, overflow, n_failed = pool.demote_pages(candidates)
+        report.demoted += n_ok
+        report.demote_failed += n_failed
+        for pid in overflow:
+            # §5.1: slow tier full — fall back to default reclamation
+            # (the swap analogue) for that page.
+            if not pool.is_pinned(pid):
+                pool.evict_page(pid)
+                report.evicted += 1
             else:
                 report.demote_failed += 1
 
     # ------------------------------------------------------------------ #
-    def step(self, slow_hits: Sequence[int] = ()) -> StepReport:
+    def step(
+        self,
+        slow_hits: Sequence[int] = (),
+        fast_hits: Sequence[int] = (),
+    ) -> StepReport:
         """One control-loop iteration.
 
-        ``slow_hits`` — page ids whose accesses this step were served by
-        the slow tier (the engine's block-table lookups make these free
-        to collect; see DESIGN.md §2).
+        ``slow_hits`` / ``fast_hits`` — page ids whose accesses this step
+        were served by the slow / fast tier (the engine's block-table
+        lookups make these free to collect; see DESIGN.md §2).  TPP
+        never samples the fast tier, so ``fast_hits`` is ignored.
         """
+        del fast_hits  # TPP restricts hint faults to the slow node (§5.3)
         report = StepReport()
         self._promote(self._sample_hint_faults(slow_hits), report)
         self._demote(report)
         self.pool.step += 1
         return report
-
-
-def make_policy(
-    name: str,
-    pool: PagePool,
-    seed: int = 0,
-):
-    """Factory over TPP and the paper's comparison policies."""
-    from repro.core import baselines  # local import to avoid cycle
-
-    table = {
-        "tpp": TppPolicy,
-        "linux": baselines.DefaultLinuxPolicy,
-        "numa_balancing": baselines.NumaBalancingPolicy,
-        "autotiering": baselines.AutoTieringPolicy,
-        "ideal": baselines.IdealPolicy,
-    }
-    if name not in table:
-        raise ValueError(f"unknown policy {name!r}; choose from {sorted(table)}")
-    return table[name](pool, seed=seed)

@@ -220,7 +220,132 @@ class TraceGenerator:
         return TraceStep(allocs=allocs, accesses=[int(a) for a in acc], frees=frees)
 
 
-def make_trace(name: str, seed: int = 0, total_pages: Optional[int] = None) -> TraceGenerator:
+class MultiTenantTrace:
+    """Interleave N per-tenant workloads into one trace (co-running apps).
+
+    The paper's production hosts co-run applications whose placement
+    traffic contends for the same fast tier (§6.2); Equilibria-style
+    multi-tenant evaluation is where tiering policies differentiate.
+    Each tenant runs its own :class:`TraceGenerator` (independent seed);
+    per-step events are merged with a collision-free index encoding
+
+        global_idx = local_idx * n_tenants + tenant_id
+
+    so tenant attribution is recoverable from any index without a lookup
+    table: :meth:`tenant_of` / :meth:`tenant_of_array`.  The simulator
+    uses that to attribute vmstat-style counters (fast/slow accesses,
+    allocations, refaults) to each tenant.
+    """
+
+    def __init__(
+        self,
+        specs: Sequence[WorkloadSpec],
+        seed: int = 0,
+        total_pages_each: Optional[int] = None,
+    ) -> None:
+        if not specs:
+            raise ValueError("MultiTenantTrace needs at least one tenant")
+        self.specs = list(specs)
+        self.n_tenants = len(self.specs)
+        self.tenant_names = [s.name for s in self.specs]
+        self.tenants = [
+            TraceGenerator(spec, seed=seed + t, total_pages=total_pages_each)
+            for t, spec in enumerate(self.specs)
+        ]
+
+    # -------------------------------------------------------------- #
+    def tenant_of(self, gidx: int) -> int:
+        return gidx % self.n_tenants
+
+    def tenant_of_array(self, gidx: np.ndarray) -> np.ndarray:
+        return gidx % self.n_tenants
+
+    def _g(self, local_idx: int, tenant: int) -> int:
+        return local_idx * self.n_tenants + tenant
+
+    # -------------------------------------------------------------- #
+    def __iter__(self) -> Iterator[TraceStep]:
+        return self
+
+    def __next__(self) -> TraceStep:
+        allocs: List[Tuple[int, PageType]] = []
+        accesses: List[int] = []
+        frees: List[int] = []
+        for t, gen in enumerate(self.tenants):
+            step = next(gen)
+            allocs += [(self._g(i, t), pt) for i, pt in step.allocs]
+            accesses += [self._g(i, t) for i in step.accesses]
+            frees += [self._g(i, t) for i in step.frees]
+        return TraceStep(allocs=allocs, accesses=accesses, frees=frees)
+
+
+class ReplayTrace:
+    """Replay pre-generated steps (fair engine benchmarking).
+
+    Generating a fleet-scale trace is itself O(pages) Python work; the
+    engine benchmarks pre-generate the step list once and replay it to
+    every engine/policy so the measured time is pool+policy mechanism
+    only.  Tenant attribution is forwarded from the source trace.
+    """
+
+    def __init__(self, steps: Sequence[TraceStep], source=None) -> None:
+        self._steps = list(steps)
+        self._pos = 0
+        self.n_tenants = getattr(source, "n_tenants", 1)
+        self.tenant_names = getattr(source, "tenant_names", None)
+        if source is not None and hasattr(source, "tenant_of"):
+            self.tenant_of = source.tenant_of
+            self.tenant_of_array = source.tenant_of_array
+
+    def __len__(self) -> int:
+        return len(self._steps)
+
+    def reset(self) -> "ReplayTrace":
+        """Rewind to the first step (replay the recording again)."""
+        self._pos = 0
+        return self
+
+    def __iter__(self) -> "ReplayTrace":
+        return self
+
+    def __next__(self) -> TraceStep:
+        if self._pos >= len(self._steps):
+            raise StopIteration
+        step = self._steps[self._pos]
+        self._pos += 1
+        return step
+
+
+def record_trace(trace, steps: int) -> ReplayTrace:
+    """Materialize ``steps`` events from ``trace`` into a ReplayTrace."""
+    return ReplayTrace([next(trace) for _ in range(steps)], source=trace)
+
+
+def workload_total_pages(name: str) -> int:
+    """Default page count of a workload name, summing ``a+b`` mixes."""
+    return sum(WORKLOADS[part].total_pages for part in name.split("+"))
+
+
+def make_trace(name: str, seed: int = 0, total_pages: Optional[int] = None):
+    """Build a trace for ``name``.
+
+    ``name`` is either one workload ("web") or a ``+``-joined tenant mix
+    ("web+cache1+ads") producing a :class:`MultiTenantTrace`.  For a
+    mix, ``total_pages`` is the combined footprint, split evenly across
+    tenants.
+    """
+    if "+" in name:
+        parts = name.split("+")
+        for part in parts:
+            if part not in WORKLOADS:
+                raise ValueError(
+                    f"unknown workload {part!r}; choose from {sorted(WORKLOADS)}"
+                )
+        per_tenant = total_pages // len(parts) if total_pages else None
+        return MultiTenantTrace(
+            [WORKLOADS[p] for p in parts], seed=seed,
+            total_pages_each=per_tenant,
+        )
     if name not in WORKLOADS:
         raise ValueError(f"unknown workload {name!r}; choose from {sorted(WORKLOADS)}")
     return TraceGenerator(WORKLOADS[name], seed=seed, total_pages=total_pages)

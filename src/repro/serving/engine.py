@@ -275,11 +275,9 @@ class ServingEngine:
             req.out.append(tok)
             if len(req.out) >= req.max_new:
                 req.done = True
-        # policy step (NUMA-balancing baseline also samples fast hits)
-        if self.ecfg.policy == "numa_balancing":
-            self.policy.step(slow_hits, fast_hits)  # type: ignore[call-arg]
-        else:
-            self.policy.step(slow_hits)
+        # Uniform PlacementPolicy protocol: every policy receives both hit
+        # streams (NUMA balancing samples fast hits; the rest ignore them).
+        self.policy.step(slow_hits, fast_hits)
         self.steps += 1
         if self.steps % 4 == 0:
             self.kv.pool.end_interval()

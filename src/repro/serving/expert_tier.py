@@ -107,10 +107,8 @@ class ExpertTierManager:
             pid = self.pid_of[(l, e)]
             tier = self.pool.touch(pid)
             (slow_hits if tier == Tier.SLOW else fast_hits).append(pid)
-        if self.cfg.policy == "numa_balancing":
-            self.policy.step(slow_hits, fast_hits)  # type: ignore[call-arg]
-        else:
-            self.policy.step(slow_hits)
+        # Uniform PlacementPolicy protocol — no per-policy special cases.
+        self.policy.step(slow_hits, fast_hits)
 
     # ---------------------------------------------------------------- #
     def modeled_cost(self) -> float:

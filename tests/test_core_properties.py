@@ -1,0 +1,105 @@
+"""Property-based tests for the TPP core (optional ``hypothesis`` dep).
+
+These explore the same invariants as the deterministic versions in
+``test_core_tpp.py`` over arbitrary event sequences.  ``hypothesis`` is
+an optional dev dependency (``pip install -e .[dev]``); without it this
+module is skipped and tier-1 still passes.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    PageType,
+    Tier,
+    TppConfig,
+    make_policy,
+    make_pool,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    events=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 63), st.booleans()),
+        min_size=1,
+        max_size=200,
+    ),
+    policy_name=st.sampled_from(["tpp", "linux", "autotiering"]),
+    engine=st.sampled_from(["reference", "vectorized"]),
+)
+def test_pool_invariants_under_random_events(events, policy_name, engine):
+    """No frame double-maps, LRU membership consistent, frames conserved."""
+    pool = make_pool(engine, 24, 48, config=TppConfig())
+    policy = make_policy(policy_name, pool)
+    live = []
+    for (op, val, flag) in events:
+        try:
+            if op == 0:  # allocate
+                pt = PageType.ANON if flag else PageType.FILE
+                live.append(pool.allocate(pt).pid)
+            elif op == 1 and live:  # touch
+                pool.touch(live[val % len(live)])
+            elif op == 2 and live:  # free
+                pool.free(live.pop(val % len(live)))
+            elif op == 3:  # policy step w/ random slow hits
+                hits = [pid for pid in live[: val % 8]
+                        if pool.tier_of(pid) == Tier.SLOW]
+                policy.step(hits)
+            elif op == 4:  # interval boundary
+                pool.end_interval()
+        except MemoryError:
+            if live:
+                pool.evict_page(live.pop(0))
+    pool.check_invariants()
+    n_live = (
+        len(pool.pages_in_tier(Tier.FAST)) + len(pool.pages_in_tier(Tier.SLOW))
+    )
+    assert n_live == (
+        pool.used_frames(Tier.FAST) + pool.used_frames(Tier.SLOW)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_tpp_beats_linux_on_skewed_traffic(seed):
+    """On a zipf-skewed workload with cold bulk, TPP never loses to the
+    no-migration baseline on fast-tier traffic share (the paper's core
+    claim, as an order property)."""
+    from repro.core import run_policy_comparison
+
+    res = run_policy_comparison(
+        "cache1", fast_frames=96, slow_frames=512, steps=60,
+        policies=("linux", "tpp"), seed=seed, total_pages=400,
+        measure_from=30,
+    )
+    assert (
+        res["tpp"].mean_local_fraction
+        >= res["linux"].mean_local_fraction - 0.02
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    policy=st.sampled_from(["tpp", "linux", "numa_balancing", "autotiering"]),
+)
+def test_engine_parity_property(seed, policy):
+    """Reference and vectorized engines agree on arbitrary seeds."""
+    from repro.core import TieredSimulator, make_trace
+
+    results = {}
+    for engine in ("reference", "vectorized"):
+        sim = TieredSimulator(
+            "cache1", policy, 64, 256, seed=seed,
+            trace=make_trace("cache1", seed=seed, total_pages=220),
+            engine=engine,
+        )
+        results[engine] = sim.run(25, measure_from=5)
+    assert (
+        results["reference"].vmstat.as_dict()
+        == results["vectorized"].vmstat.as_dict()
+    )
+    assert results["reference"].summary() == results["vectorized"].summary()

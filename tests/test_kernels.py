@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -78,14 +77,13 @@ def test_paged_attention_sweep(B, H, Hkv, P, MP, D, dtype):
     )
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    n=st.integers(1, 8),
-    f=st.integers(8, 24),
-    seed=st.integers(0, 100),
+@pytest.mark.parametrize(
+    "n,f,seed",
+    [(1, 8, 0), (4, 16, 7), (8, 24, 42), (3, 12, 100), (2, 9, 55),
+     (6, 20, 13), (8, 8, 77), (5, 23, 31)],
 )
 def test_page_migrate_property(n, f, seed):
-    """gather∘scatter round-trips arbitrary frames."""
+    """gather∘scatter round-trips arbitrary frames (deterministic sweep)."""
     rng = np.random.default_rng(seed)
     src = jnp.asarray(rng.standard_normal((f, 2, 4, 8)), jnp.float32)
     idx = jnp.asarray(rng.choice(f, size=n, replace=False), jnp.int32)
