@@ -27,6 +27,7 @@ MODULES = [
     ("table3", "benchmarks.table3_tmo"),
     ("expert_tier", "benchmarks.expert_tiering"),
     ("engine", "benchmarks.engine_bench"),
+    ("serving", "benchmarks.serving_bench"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),
 ]

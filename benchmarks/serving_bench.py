@@ -1,0 +1,114 @@
+"""Serving data-plane benchmark — reference vs batched decode.
+
+Decodes the same request mix through both data planes at several batch
+sizes and reports steady-state decode throughput (tokens/sec, prefill
+and jit warm-up excluded).  Results land in ``BENCH_serving.json`` for
+the CI trendline; greedy-token parity between the planes is asserted on
+every run — a speedup that changes results is a bug, not a win.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import TppConfig
+from repro.models.model import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+MODEL = "tinyllama-1.1b"
+BATCH_SIZES = (2, 4, 8)
+PROMPT_LEN = 16
+DECODE_STEPS = 24
+# enough steps for tiering pressure to kick in: jit compiles and the
+# staged-copy width stabilize before the timed window (steady state)
+WARMUP_STEPS = 8
+
+
+def _engine(cfg, params, plane: str, batch: int) -> ServingEngine:
+    return ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=48, num_slow=256,
+        topk_pages=4, recent_pages=2, max_seqs=max(8, batch),
+        data_plane=plane,
+        tpp=TppConfig(demote_budget=16, promote_budget=8),
+    ), seed=0)
+
+
+def _decode_run(cfg, params, plane: str, batch: int, steps: int):
+    eng = _engine(cfg, params, plane, batch)
+    rng = np.random.default_rng(0)
+    rids = [
+        eng.add_request(list(rng.integers(0, cfg.vocab, PROMPT_LEN)),
+                        max_new=steps + WARMUP_STEPS)
+        for _ in range(batch)
+    ]
+    eng._grow_summaries(16)  # pre-size summary arrays: no mid-run re-jit
+    tokens = {rid: [] for rid in rids}
+    for _ in range(WARMUP_STEPS):
+        for rid, tok in eng.step().items():
+            tokens[rid].append(tok)
+    jax.effects_barrier()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        for rid, tok in eng.step().items():
+            tokens[rid].append(tok)
+    jax.effects_barrier()
+    dt = time.perf_counter() - t0
+    return dt, tokens
+
+
+def run(quick: bool = False) -> List[str]:
+    steps = 8 if quick else DECODE_STEPS
+    batches = BATCH_SIZES[:2] if quick else BATCH_SIZES
+    cfg = get_smoke_config(MODEL)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    out: List[str] = []
+    results = {}
+    for batch in batches:
+        row = {}
+        toks = {}
+        for plane in ("reference", "batched"):
+            dt, tokens = _decode_run(cfg, params, plane, batch, steps)
+            toks[plane] = tokens
+            n_tok = batch * steps
+            row[plane] = {
+                "seconds": round(dt, 3),
+                "tokens": n_tok,
+                "tokens_per_sec": round(n_tok / dt, 1),
+            }
+            out.append(
+                f"serving/{plane}_b{batch},{dt * 1e6 / steps:.1f},"
+                f"tokens_per_sec={n_tok / dt:.1f}"
+            )
+        assert toks["batched"] == toks["reference"], (
+            f"data-plane parity broken at batch {batch}"
+        )
+        speedup = (row["batched"]["tokens_per_sec"]
+                   / row["reference"]["tokens_per_sec"])
+        row["speedup"] = round(speedup, 2)
+        results[str(batch)] = row
+        out.append(f"serving/speedup_b{batch},0.0,x{speedup:.1f}")
+
+    payload = {
+        "model": MODEL,
+        "prompt_len": PROMPT_LEN,
+        "decode_steps": steps,
+        "batch_sizes": list(batches),
+        "results": results,
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -5,8 +5,17 @@ the total KV footprint; one session pauses mid-stream (its pages cool
 off and demote) and later resumes (hint faults promote them back).
 Prints per-phase placement stats — the serving-side Fig. 14 analogue.
 
-  PYTHONPATH=src python examples/serve_tiered.py
+By default this runs the **batched** data plane: every step decodes all
+sessions in one jitted call through ``kernels.paged_attention`` and
+migrations move as staged ``page_gather``/``page_scatter`` batches.
+``--data-plane reference`` runs the per-sequence executable spec —
+identical tokens and placement, ~an order of magnitude slower (see
+benchmarks/serving_bench.py).
+
+  PYTHONPATH=src python examples/serve_tiered.py [--data-plane reference]
 """
+
+import argparse
 
 import numpy as np
 import jax
@@ -26,6 +35,10 @@ def phase_stats(eng: ServingEngine, label: str) -> None:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data-plane", default="batched",
+                    choices=["reference", "batched"])
+    args = ap.parse_args()
     cfg = get_smoke_config("gemma3-4b")  # 5:1 local:global pattern
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(
@@ -33,6 +46,7 @@ def main() -> None:
         EngineConfig(
             page_size=4, num_fast=24, num_slow=128,
             topk_pages=2, recent_pages=2, policy="tpp",
+            data_plane=args.data_plane,
             tpp=TppConfig(demote_budget=16, promote_budget=8),
         ),
     )
@@ -42,7 +56,8 @@ def main() -> None:
         for _ in range(3)
     ]
     print(f"3 sessions × 48-token prompts; fast tier: 24 pages × "
-          f"{eng.ecfg.page_size} tokens (total KV ≫ fast tier)")
+          f"{eng.ecfg.page_size} tokens (total KV ≫ fast tier); "
+          f"data plane: {args.data_plane}")
 
     for _ in range(12):
         eng.step()

@@ -46,13 +46,19 @@ def flash_attention(q, k, v, causal=True, window=None, scale=None, impl="auto", 
                   interpret=interpret or not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "impl", "interpret"))
-def paged_attention(q, k_pages, v_pages, block_table, lengths, scale=None,
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "impl", "interpret")
+)
+def paged_attention(q, k_pages, v_pages, block_table, lengths=None, scale=None,
+                    page_pos=None, q_pos=None, window=None,
                     impl="auto", interpret=False):
     mode = _pick(impl)
     if mode == "ref":
-        return _ref.paged_attention_ref(q, k_pages, v_pages, block_table, lengths, scale=scale)
+        return _ref.paged_attention_ref(
+            q, k_pages, v_pages, block_table, lengths, scale=scale,
+            page_pos=page_pos, q_pos=q_pos, window=window)
     return _paged(q, k_pages, v_pages, block_table, lengths, scale=scale,
+                  page_pos=page_pos, q_pos=q_pos, window=window,
                   interpret=interpret or not _on_tpu())
 
 

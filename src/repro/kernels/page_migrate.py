@@ -58,7 +58,9 @@ def _scatter_kernel(idx_ref, pages_ref, dst_ref, out_ref):
 
 def page_scatter(
     dst: jax.Array,  # (F, ...) frames
-    frames: jax.Array,  # (N,) int32 — distinct target frames
+    frames: jax.Array,  # (N,) int32 target frames; duplicates allowed
+    # only with identical payloads (same-frame write order is unspecified
+    # — the staged-migration flush pads batches with trash-frame copies)
     pages: jax.Array,  # (N, ...) payloads
     interpret: bool = False,
 ) -> jax.Array:

@@ -13,6 +13,16 @@ One new token per sequence attends over that sequence's KV **pages**
 * GQA via q layout ``(B, Hkv, G, D)``; scores/PV are batched
   ``dot_general`` over the kv-head dim (MXU).
 
+Two masking modes:
+
+* **length mode** (``lengths``): the sequence's pages form a dense
+  prefix — token ``ip·P + j`` is valid iff it is ``< lengths[b]``.
+* **position mode** (``page_pos`` + ``q_pos``): each block-table entry
+  carries the absolute position of its page's first token, so sequences
+  may present *sparse, variable-length page subsets* (page-level top-k
+  attention) and sliding-window layers mask by absolute distance.  Pad
+  entries use a large sentinel start so every slot masks out.
+
 Pages hold post-RoPE keys, so page order is irrelevant to correctness —
 which is exactly why TPP can migrate them freely.
 """
@@ -29,6 +39,34 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = float("-inf")
+
+# Pad entries in position-mode block tables use this page start: every
+# slot position exceeds any reachable q_pos, so the page masks out.
+PAD_PAGE_POS = 1 << 30
+
+
+def _online_update(s, mask, v, acc_ref, m_ref, l_ref):
+    """One online-softmax accumulation step over a page of scores."""
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+    m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=2, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+
+def _scores(q_ref, k_ref, scale):
+    q = q_ref[0].astype(jnp.float32) * scale  # (Hkv, G, D)
+    k = k_ref[0].astype(jnp.float32)  # (Hkv, P, D)
+    # batched over kv-heads: (Hkv, G, P)
+    return jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
 
 
 def _paged_kernel(
@@ -53,32 +91,50 @@ def _paged_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(jnp.float32) * scale  # (Hkv, G, D)
-    k = k_ref[0].astype(jnp.float32)  # (Hkv, P, D)
-    v = v_ref[0].astype(jnp.float32)
-
-    # batched over kv-heads: (Hkv, G, P)
-    s = jax.lax.dot_general(
-        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
-    )
-    # valid tokens in this page
+    s = _scores(q_ref, k_ref, scale)
+    # valid tokens in this page: dense prefix of ``lengths[b]`` tokens
     length = len_ref[b]
-    t_pos = ip * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, 2
-    )
+    t_pos = ip * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
     mask = t_pos < length
-    s = jnp.where(mask, s, NEG_INF)
+    _online_update(s, mask, v_ref[0].astype(jnp.float32), acc_ref, m_ref, l_ref)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
-    m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
-    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
-    corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=2, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
-    )
-    m_ref[...] = m_new
+    @pl.when(ip == np_ - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def _paged_kernel_pos(
+    bt_ref,  # scalar-prefetch: (B, MP) int32 block table
+    pos_ref,  # scalar-prefetch: (B, MP) int32 absolute start of each page
+    qpos_ref,  # scalar-prefetch: (B,) int32 absolute query positions
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    page_size: int,
+    window: Optional[int],
+):
+    b = pl.program_id(0)
+    ip = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = _scores(q_ref, k_ref, scale)
+    # absolute position of every slot in this page; causal + window mask
+    q_pos = qpos_ref[b]
+    abs_pos = pos_ref[b, ip] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    mask = abs_pos <= q_pos
+    if window is not None:
+        mask &= abs_pos > q_pos - window
+    _online_update(s, mask, v_ref[0].astype(jnp.float32), acc_ref, m_ref, l_ref)
 
     @pl.when(ip == np_ - 1)
     def _flush():
@@ -90,8 +146,11 @@ def paged_attention(
     k_pages: jax.Array,  # (F, Hkv, P, D)
     v_pages: jax.Array,
     block_table: jax.Array,  # (B, MP) int32
-    lengths: jax.Array,  # (B,) int32
+    lengths: Optional[jax.Array] = None,  # (B,) int32 (length mode)
     scale: Optional[float] = None,
+    page_pos: Optional[jax.Array] = None,  # (B, MP) int32 (position mode)
+    q_pos: Optional[jax.Array] = None,  # (B,) int32 (position mode)
+    window: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, H, D = q.shape
@@ -101,16 +160,32 @@ def paged_attention(
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     qg = q.reshape(B, Hkv, G, D)
 
-    kernel = functools.partial(_paged_kernel, scale=scale, page_size=P)
+    pos_mode = page_pos is not None
+    if pos_mode:
+        if q_pos is None:
+            raise ValueError("position mode needs both page_pos and q_pos")
+        kernel = functools.partial(
+            _paged_kernel_pos, scale=scale, page_size=P, window=window
+        )
+        scalars = (block_table, page_pos, q_pos)
+    else:
+        if lengths is None:
+            raise ValueError("length mode needs lengths")
+        if window is not None:
+            raise ValueError("window masking needs position mode (page_pos/q_pos)")
+        kernel = functools.partial(_paged_kernel, scale=scale, page_size=P)
+        scalars = (block_table, lengths)
+
+    nsc = len(scalars)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=nsc,
         grid=(B, MP),
         in_specs=[
-            pl.BlockSpec((1, Hkv, G, D), lambda b, ip, bt, ln: (b, 0, 0, 0)),
-            pl.BlockSpec((1, Hkv, P, D), lambda b, ip, bt, ln: (bt[b, ip], 0, 0, 0)),
-            pl.BlockSpec((1, Hkv, P, D), lambda b, ip, bt, ln: (bt[b, ip], 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, G, D), lambda b, ip, *s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, P, D), lambda b, ip, *s: (s[0][b, ip], 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, P, D), lambda b, ip, *s: (s[0][b, ip], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, Hkv, G, D), lambda b, ip, bt, ln: (b, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, Hkv, G, D), lambda b, ip, *s: (b, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hkv, G, D), jnp.float32),
             pltpu.VMEM((Hkv, G, 1), jnp.float32),
@@ -122,5 +197,5 @@ def paged_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(block_table, lengths, qg, k_pages, v_pages)
+    )(*scalars, qg, k_pages, v_pages)
     return out.reshape(B, H, D)

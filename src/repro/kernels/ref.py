@@ -42,8 +42,11 @@ def paged_attention_ref(
     k_pages: jax.Array,  # (F, Hkv, P, D)
     v_pages: jax.Array,  # (F, Hkv, P, D)
     block_table: jax.Array,  # (B, MP) int32 — frame per logical page
-    lengths: jax.Array,  # (B,) int32 — valid tokens per sequence
+    lengths: Optional[jax.Array] = None,  # (B,) int32 (length mode)
     scale: Optional[float] = None,
+    page_pos: Optional[jax.Array] = None,  # (B, MP) int32 (position mode)
+    q_pos: Optional[jax.Array] = None,  # (B,) int32 (position mode)
+    window: Optional[int] = None,
 ) -> jax.Array:
     B, H, D = q.shape
     F, Hkv, P, _ = k_pages.shape
@@ -57,8 +60,17 @@ def paged_attention_ref(
     vg = jnp.moveaxis(vg, 2, 1).reshape(B, Hkv, MP * P, D)
     qf = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
     s = jnp.einsum("bhgd,bhtd->bhgt", qf, kg.astype(jnp.float32))
-    t_pos = jnp.arange(MP * P)[None, :]
-    valid = t_pos < lengths[:, None]
+    if page_pos is not None:
+        # position mode: per-page absolute starts (sparse page subsets)
+        abs_pos = (page_pos[:, :, None] + jnp.arange(P)[None, None, :]).reshape(
+            B, MP * P
+        )
+        valid = abs_pos <= q_pos[:, None]
+        if window is not None:
+            valid &= abs_pos > q_pos[:, None] - window
+    else:
+        t_pos = jnp.arange(MP * P)[None, :]
+        valid = t_pos < lengths[:, None]
     s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)

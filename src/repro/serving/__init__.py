@@ -1,7 +1,13 @@
 from repro.serving.kv_cache import TieredKVCache, KVCacheConfig
-from repro.serving.engine import ServingEngine, EngineConfig, Request
+from repro.serving.engine import (
+    AdmissionError,
+    EngineConfig,
+    Request,
+    ServingEngine,
+)
 
 __all__ = [
+    "AdmissionError",
     "EngineConfig",
     "KVCacheConfig",
     "Request",

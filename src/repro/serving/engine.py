@@ -17,9 +17,20 @@ The decode data plane supplies exactly the access stream TPP consumes
   stop being touched → TPP demotes them; resume touches them again →
   promotion with hysteresis.
 
+Two data planes (``EngineConfig.data_plane``, DESIGN.md §6):
+
+* ``"reference"`` — one sequence at a time, per-layer Python loops,
+  per-token cache writes.  Slow, obviously-correct executable spec.
+* ``"batched"`` — all active sequences decode in **one jitted call**:
+  per-step block tables feed ``kernels.paged_attention`` (grid
+  ``(B, MP)``), token KV lands via batched scatters, page-key summaries
+  live in an incrementally-updated device array, and migration payloads
+  move in staged ``page_gather``/``page_scatter`` batches.  Identical
+  greedy tokens and VmStat trajectories (tests/test_serving_parity.py).
+
 The engine reports per-step slow-tier page hits to the policy
 (`TppPolicy` or any baseline from ``repro.core.baselines``), which
-migrates payloads through the cache's ``on_migrate`` hook — real buffer
+migrates payloads through the cache's migration hook — real buffer
 copies, identical mechanics to the kernel patchset, just one level down
 the memory hierarchy.
 """
@@ -35,12 +46,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import PageType, Tier, TppConfig, make_policy
+from repro.kernels import ops as kernel_ops
+from repro.kernels.paged_attention import PAD_PAGE_POS
 from repro.models import nn
 from repro.models.attention import AttnConfig, make_cos_sin, _rotate
 from repro.models.ffn import ffn_fwd
 from repro.models.model import ModelConfig
 from repro.models.moe import moe_fwd
-from repro.serving.kv_cache import KVCacheConfig, TieredKVCache
+from repro.serving.kv_cache import KVCacheConfig, TieredKVCache, bucket as _bucket
+
+
+class AdmissionError(RuntimeError):
+    """Raised when ``add_request`` would exceed ``EngineConfig.max_seqs``."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +70,7 @@ class EngineConfig:
     policy: str = "tpp"
     tpp: TppConfig = dataclasses.field(default_factory=TppConfig)
     max_seqs: int = 8
+    data_plane: str = "reference"  # "reference" | "batched"
 
 
 @dataclasses.dataclass
@@ -107,20 +125,30 @@ class ServingEngine:
                     "archs serve from O(1) recurrent state (TPP inapplicable; "
                     "see DESIGN.md §Arch-applicability), MLA via dense path"
                 )
+        if engine.data_plane not in ("reference", "batched"):
+            raise ValueError(f"unknown data_plane {engine.data_plane!r}")
+        if (engine.data_plane == "batched" and engine.topk_pages is not None
+                and engine.recent_pages < 1):
+            raise ValueError(
+                "batched data plane needs recent_pages >= 1 with top-k "
+                "attention (the decode-tail page must be block-table "
+                "addressable)"
+            )
         self.cfg = cfg
         self.ecfg = engine
         self.specs = cfg.all_specs()
         self.layers = _flat_layers(params, cfg)
         self.params = params
         a0 = self.specs[0].attn
-        kv_width = 2 * a0.n_kv_heads * a0.head_dim
         self.kv = TieredKVCache(
             KVCacheConfig(
                 n_layers=cfg.n_layers,
                 page_size=engine.page_size,
-                kv_width=kv_width,
+                n_kv_heads=a0.n_kv_heads,
+                head_dim=a0.head_dim,
                 num_fast=engine.num_fast,
                 num_slow=engine.num_slow,
+                staged_migration=(engine.data_plane == "batched"),
             ),
             tpp=engine.tpp,
         )
@@ -128,19 +156,50 @@ class ServingEngine:
         self.seqs: Dict[int, _Seq] = {}
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
-        # page key summaries for top-k selection: pid -> (L, Hkv, D) np
+        # page key summaries for top-k selection (reference plane):
+        # pid -> (L, Hkv, D) np
         self._summaries: Dict[int, np.ndarray] = {}
         self.steps = 0
+        # ------------------------------------------------------------ #
+        # batched plane: per-slot device summary state + jitted fns
+        # ------------------------------------------------------------ #
+        self._slot_of: Dict[int, int] = {}
+        self._free_slots = list(range(engine.max_seqs - 1, -1, -1))
+        self._mp_cap = 8
+        if engine.data_plane == "batched":
+            L, Hkv, D = cfg.n_layers, a0.n_kv_heads, a0.head_dim
+            # +1 trash slot: padded batch lanes accumulate there
+            self._ksum = jnp.zeros(
+                (engine.max_seqs + 1, self._mp_cap, L, Hkv, D), jnp.float32
+            )
+            self._kcnt = jnp.zeros(
+                (engine.max_seqs + 1, self._mp_cap), jnp.float32
+            )
+            p0 = self.layers[0]
+            pa0 = p0["base"] if "base" in p0 else p0
+            self._probe_params = (params["embed"], pa0["norm1"],
+                                  pa0["attn"]["wq"])
+            self._step_fn = jax.jit(
+                self._batched_step_impl, donate_argnums=(0, 1, 2, 3)
+            )
+            self._score_fn = jax.jit(self._score_impl)
 
     # ---------------------------------------------------------------- #
     # request lifecycle
     # ---------------------------------------------------------------- #
     def add_request(self, prompt: Sequence[int], max_new: int = 16) -> int:
+        if len(self.seqs) >= self.ecfg.max_seqs:
+            raise AdmissionError(
+                f"engine at max_seqs={self.ecfg.max_seqs}; finish() a "
+                "sequence before admitting another"
+            )
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
         self.requests[rid] = req
         self.seqs[rid] = _Seq(rid)
+        if self.ecfg.data_plane == "batched":
+            self._slot_of[rid] = self._free_slots.pop()
         self._prefill(req)
         return rid
 
@@ -152,13 +211,27 @@ class ServingEngine:
             self.kv.retype(pid, PageType.FILE)
 
     def resume(self, rid: int) -> None:
-        self.seqs[rid].paused = False
+        seq = self.seqs[rid]
+        seq.paused = False
+        if seq.pages:
+            # The still-being-written tail resumes as the hot decode page;
+            # without this it would stay FILE forever and §5.4 type-aware
+            # allocation would misclassify every subsequent write.
+            self.kv.retype(seq.pages[-1], PageType.ANON)
 
-    def finish(self, rid: int) -> None:
-        for pid in self.seqs[rid].pages:
+    def finish(self, rid: int) -> Request:
+        """Release a sequence; returns its (now detached) Request."""
+        seq = self.seqs.pop(rid)
+        for pid in seq.pages:
             self._summaries.pop(pid, None)
             self.kv.free_page(pid)
-        del self.seqs[rid]
+        req = self.requests.pop(rid)
+        if self.ecfg.data_plane == "batched":
+            slot = self._slot_of.pop(rid)
+            self._ksum = self._ksum.at[slot].set(0.0)
+            self._kcnt = self._kcnt.at[slot].set(0.0)
+            self._free_slots.append(slot)
+        return req
 
     # ---------------------------------------------------------------- #
     # prefill
@@ -173,20 +246,18 @@ class ServingEngine:
             seq.pages.append(self.kv.alloc_page(PageType.ANON))
         return seq.pages[-1], slot
 
-    def _prefill(self, req: Request) -> None:
-        """Run the stack over ``prompt[:-1]``, paging out per-layer KV.
+    def _prefill_forward(self, req: Request) -> Tuple[jax.Array, jax.Array]:
+        """Run the stack over ``prompt[:-1]`` → per-layer K and V.
 
-        The last prompt token is fed by the first decode step (whose
-        logits produce the first generated token) — standard
-        prefill/decode split."""
-        seq = self.seqs[req.rid]
-        if len(req.prompt) <= 1:
-            return
+        Returns ``(k_all, v_all)`` of shape ``(L, S, Hkv, D)``.  The last
+        prompt token is fed by the first decode step (whose logits
+        produce the first generated token) — standard prefill/decode
+        split."""
         toks = jnp.asarray(req.prompt[:-1], jnp.int32)[None, :]  # (1, S)
         S = toks.shape[1]
         x = nn.embed(self.params["embed"], toks)
         pos = jnp.arange(S, dtype=jnp.int32)[None, :]
-        kv_per_layer = []
+        k_layers, v_layers = [], []
         for li, spec in enumerate(self.specs):
             p = self.layers[li]
             pa = p["base"] if "base" in p else p
@@ -216,18 +287,54 @@ class ServingEngine:
                 else:
                     y2 = ffn_fwd(pa["ffn"], h2, spec.ffn_kind)
                 x = x + y2
-            kv_per_layer.append(
-                jnp.concatenate(
-                    [k[0].reshape(S, -1), v[0].reshape(S, -1)], axis=-1
-                )  # (S, W) — layout [all-k | all-v]
-            )
-        kv_all = jnp.stack(kv_per_layer, axis=0)  # (L, S, W)
+            k_layers.append(k[0])  # (S, Hkv, D)
+            v_layers.append(v[0])
+        return jnp.stack(k_layers, axis=0), jnp.stack(v_layers, axis=0)
 
+    def _prefill(self, req: Request) -> None:
+        seq = self.seqs[req.rid]
+        if len(req.prompt) <= 1:
+            return
+        k_all, v_all = self._prefill_forward(req)  # (L, S, Hkv, D)
+        if self.ecfg.data_plane == "batched":
+            self._prefill_write_batched(seq, k_all, v_all)
+            return
+        L, S = k_all.shape[0], k_all.shape[1]
+        kv_all = jnp.concatenate(
+            [k_all.reshape(L, S, -1), v_all.reshape(L, S, -1)], axis=-1
+        )  # (L, S, W) — layout [all-k | all-v]
         for t in range(S):
             pid, slot = self._ensure_page(seq)
             self.kv.write_token(pid, slot, kv_all[:, t, :])
             seq.cur_len += 1
         self._refresh_summaries(seq)
+
+    def _prefill_write_batched(self, seq: _Seq, k_all: jax.Array,
+                               v_all: jax.Array) -> None:
+        """Land the whole prompt KV in one scatter per store and seed the
+        per-page key-summary device arrays."""
+        P = self.ecfg.page_size
+        L, S = k_all.shape[0], k_all.shape[1]
+        pids, slots = [], []
+        for _ in range(S):
+            pid, slot = self._ensure_page(seq)
+            pids.append(pid)
+            slots.append(slot)
+            seq.cur_len += 1
+        self.kv.write_tokens(
+            pids, slots, jnp.moveaxis(k_all, 1, 0), jnp.moveaxis(v_all, 1, 0)
+        )
+        npages = len(seq.pages)
+        self._grow_summaries(npages)
+        pad = npages * P - S
+        kp = jnp.pad(k_all.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sums = kp.reshape(L, npages, P, kp.shape[2], kp.shape[3]).sum(axis=2)
+        sums = jnp.moveaxis(sums, 0, 1)  # (npages, L, Hkv, D)
+        counts = np.full(npages, P, np.float32)
+        counts[-1] = P - pad
+        slot_id = self._slot_of[seq.rid]
+        self._ksum = self._ksum.at[slot_id, :npages].set(sums)
+        self._kcnt = self._kcnt.at[slot_id, :npages].set(jnp.asarray(counts))
 
     def _refresh_summaries(self, seq: _Seq) -> None:
         a0 = self.specs[0].attn
@@ -237,11 +344,24 @@ class ServingEngine:
             k = page[..., : Hkv * D].reshape(page.shape[0], page.shape[1], Hkv, D)
             self._summaries[pid] = k.mean(axis=1)  # (L, Hkv, D)
 
+    def _grow_summaries(self, needed: int) -> None:
+        if self.ecfg.data_plane != "batched" or needed <= self._mp_cap:
+            return
+        new_cap = _bucket(needed)
+        pad = new_cap - self._mp_cap
+        self._ksum = jnp.pad(self._ksum, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+        self._kcnt = jnp.pad(self._kcnt, ((0, 0), (0, pad)))
+        self._mp_cap = new_cap
+
     # ---------------------------------------------------------------- #
     # page selection (the access skew)
     # ---------------------------------------------------------------- #
-    def _select_pages(self, seq: _Seq, q_mean: np.ndarray) -> List[int]:
-        """Recent tail pages (exact) + top-k older pages by relevance."""
+    def _select_pages(self, seq: _Seq, older_scores: np.ndarray) -> List[int]:
+        """Recent tail pages (exact) + top-k older pages by relevance.
+
+        ``older_scores[i]`` scores ``seq.pages[i]`` for the non-recent
+        prefix; both planes produce it from the same page-key summaries
+        (host dict vs device array)."""
         n = len(seq.pages)
         recent = seq.pages[max(0, n - self.ecfg.recent_pages):]
         if self.ecfg.topk_pages is None:
@@ -249,11 +369,7 @@ class ServingEngine:
         older = seq.pages[: max(0, n - self.ecfg.recent_pages)]
         if not older or self.ecfg.topk_pages == 0:
             return recent
-        scores = []
-        for pid in older:
-            s = self._summaries.get(pid)
-            scores.append(float(np.einsum("hd,lhd->", q_mean, s)) if s is not None else -1e9)
-        order = np.argsort(scores)[::-1][: self.ecfg.topk_pages]
+        order = np.argsort(older_scores)[::-1][: self.ecfg.topk_pages]
         return [older[i] for i in sorted(order)] + recent
 
     # ---------------------------------------------------------------- #
@@ -263,15 +379,18 @@ class ServingEngine:
         """One decode step for all active sequences → {rid: token}."""
         active = [s for s in self.seqs.values()
                   if not s.paused and not self.requests[s.rid].done]
-        out: Dict[int, int] = {}
-        slow_hits: List[int] = []
-        fast_hits: List[int] = []
-        for seq in active:
-            tok, s_hits, f_hits = self._decode_one(seq)
-            out[seq.rid] = tok
-            slow_hits += s_hits
-            fast_hits += f_hits
-            req = self.requests[seq.rid]
+        if self.ecfg.data_plane == "batched":
+            out, slow_hits, fast_hits = self._decode_batched(active)
+        else:
+            out = {}
+            slow_hits, fast_hits = [], []
+            for seq in active:
+                tok, s_hits, f_hits = self._decode_one(seq)
+                out[seq.rid] = tok
+                slow_hits += s_hits
+                fast_hits += f_hits
+        for rid, tok in out.items():
+            req = self.requests[rid]
             req.out.append(tok)
             if len(req.out) >= req.max_new:
                 req.done = True
@@ -283,6 +402,7 @@ class ServingEngine:
             self.kv.pool.end_interval()
         return out
 
+    # ------------------------- reference plane ---------------------- #
     def _decode_one(self, seq: _Seq) -> Tuple[int, List[int], List[int]]:
         req = self.requests[seq.rid]
         last_tok = (req.out[-1] if req.out else req.prompt[-1])
@@ -295,12 +415,18 @@ class ServingEngine:
         a0 = self.specs[0].attn
         p0 = self.layers[0]["base"] if "base" in self.layers[0] else self.layers[0]
         q_probe = nn.dense(p0["attn"]["wq"], nn.rmsnorm(p0["norm1"], x))
-        q_probe = np.asarray(
+        q_mean = np.asarray(
             q_probe.reshape(a0.n_heads, a0.head_dim)
             .reshape(a0.n_kv_heads, -1, a0.head_dim)
             .mean(axis=1)
         )  # (Hkv, D)
-        sel = self._select_pages(seq, q_probe)
+        older = seq.pages[: max(0, len(seq.pages) - self.ecfg.recent_pages)]
+        older_scores = np.asarray([
+            float(np.einsum("hd,lhd->", q_mean, self._summaries[pid]))
+            if pid in self._summaries else -1e9
+            for pid in older
+        ])
+        sel = self._select_pages(seq, older_scores)
 
         # touch + tier accounting (the TPP access stream)
         s_hits, f_hits = [], []
@@ -335,7 +461,9 @@ class ServingEngine:
                 k = _rotate(a, k, cos, sin)
 
             Hkv, D = a.n_kv_heads, a.head_dim
-            lay = pages[:, li].reshape(n_sel * P, -1)  # (nP, W)
+            # explicit width: -1 is uninferable when sel is empty (first
+            # decode of a single-token prompt)
+            lay = pages[:, li].reshape(n_sel * P, pages.shape[-1])  # (nP, W)
             ks = lay[:, : Hkv * D].reshape(-1, Hkv, D)
             vs = lay[:, Hkv * D :].reshape(-1, Hkv, D)
             ks = jnp.concatenate([ks, k[0, :, :, :]], axis=0)  # append current
@@ -389,6 +517,174 @@ class ServingEngine:
         )
         self._summaries[pid] = kk.mean(axis=1)
         return tok, s_hits, f_hits
+
+    # ------------------------- batched plane ------------------------ #
+    def _decode_batched(
+        self, active: List[_Seq]
+    ) -> Tuple[Dict[int, int], List[int], List[int]]:
+        """One decode step for all active sequences in one jitted call."""
+        if not active:
+            return {}, [], []
+        self.kv.flush_migrations()
+        ecfg = self.ecfg
+        P = ecfg.page_size
+        B = len(active)
+        toks = np.zeros(B, np.int32)
+        for b, seq in enumerate(active):
+            req = self.requests[seq.rid]
+            toks[b] = req.out[-1] if req.out else req.prompt[-1]
+
+        # top-k relevance scores from the device summary arrays (one
+        # small transfer per step — no per-page gather round-trips)
+        scores = None
+        if (ecfg.topk_pages not in (None, 0)
+                and any(len(s.pages) > ecfg.recent_pages for s in active)):
+            slot_ids = jnp.asarray(
+                [self._slot_of[s.rid] for s in active], jnp.int32
+            )
+            scores = np.asarray(self._score_fn(
+                self._probe_params, self._ksum, self._kcnt,
+                jnp.asarray(toks), slot_ids,
+            ))
+
+        # selection + touch/tier accounting, in sequence order (the same
+        # access stream the reference plane emits)
+        sels: List[List[int]] = []
+        s_hits: List[int] = []
+        f_hits: List[int] = []
+        for b, seq in enumerate(active):
+            n_older = max(0, len(seq.pages) - ecfg.recent_pages)
+            older_scores = (scores[b, :n_older] if scores is not None
+                            else np.zeros(n_older, np.float32))
+            sel = self._select_pages(seq, older_scores)
+            sels.append(sel)
+            for pid in sel:
+                tier = self.kv.pool.touch(pid)
+                (s_hits if tier == Tier.SLOW else f_hits).append(pid)
+
+        # allocate every sequence's write target (page-boundary allocs
+        # land here; touch order above matches the reference plane —
+        # touches never move frames, so the interleave is immaterial)
+        writes = [self._ensure_page(seq) for seq in active]
+        self._grow_summaries(max(len(s.pages) for s in active))
+
+        # per-step block tables: selected pages (+ the write page when a
+        # boundary alloc created it after selection), padded to buckets
+        entries = []
+        for b, seq in enumerate(active):
+            ent = list(sels[b])
+            if writes[b][0] not in ent:
+                ent.append(writes[b][0])
+            entries.append(ent)
+        Bp = _bucket(B)
+        MPp = _bucket(max(len(e) for e in entries))
+        trash = self.kv.trash_frame
+        bt = np.full((Bp, MPp), trash, np.int32)
+        ps = np.full((Bp, MPp), PAD_PAGE_POS, np.int32)
+        qpos = np.zeros(Bp, np.int32)
+        wframe = np.full(Bp, trash, np.int32)
+        wslot = np.zeros(Bp, np.int32)
+        slot_arr = np.full(Bp, ecfg.max_seqs, np.int32)
+        gi_arr = np.zeros(Bp, np.int32)
+        toks_in = np.zeros(Bp, np.int32)
+        for b, seq in enumerate(active):
+            page_index = {pid: i for i, pid in enumerate(seq.pages)}
+            for j, pid in enumerate(entries[b]):
+                bt[b, j] = self.kv.global_frame(pid)
+                ps[b, j] = page_index[pid] * P
+            qpos[b] = seq.cur_len
+            wframe[b] = self.kv.global_frame(writes[b][0])
+            wslot[b] = writes[b][1]
+            slot_arr[b] = self._slot_of[seq.rid]
+            gi_arr[b] = len(seq.pages) - 1
+            toks_in[b] = toks[b]
+
+        out_toks, self.kv.k_store, self.kv.v_store, self._ksum, self._kcnt = (
+            self._step_fn(
+                self.kv.k_store, self.kv.v_store, self._ksum, self._kcnt,
+                self.params, self.layers,
+                jnp.asarray(toks_in), jnp.asarray(qpos),
+                jnp.asarray(bt), jnp.asarray(ps),
+                jnp.asarray(wframe), jnp.asarray(wslot),
+                jnp.asarray(slot_arr), jnp.asarray(gi_arr),
+            )
+        )
+        out_toks = np.asarray(out_toks)
+        out: Dict[int, int] = {}
+        for b, seq in enumerate(active):
+            seq.cur_len += 1
+            out[seq.rid] = int(out_toks[b])
+        return out, s_hits, f_hits
+
+    def _batched_step_impl(
+        self, k_store, v_store, ksum, kcnt, params, layers,
+        toks, q_pos, block_table, page_start, wframe, wslot, slot_ids, gi,
+    ):
+        """The jitted batched decode step: token writes as batched
+        scatters, attention via ``kernels.paged_attention`` per layer."""
+        B = toks.shape[0]
+        x = nn.embed(params["embed"], toks[:, None])  # (B, 1, d)
+        pos = q_pos[:, None]
+        k_layers = []
+        for li, spec in enumerate(self.specs):
+            p = layers[li]
+            pa = p["base"] if "base" in p else p
+            a = spec.attn
+            h = nn.rmsnorm(pa["norm1"], x)
+            q = nn.dense(pa["attn"]["wq"], h).reshape(B, 1, a.n_heads, a.head_dim)
+            k = nn.dense(pa["attn"]["wk"], h).reshape(B, 1, a.n_kv_heads, a.head_dim)
+            v = nn.dense(pa["attn"]["wv"], h).reshape(B, 1, a.n_kv_heads, a.head_dim)
+            cos, sin = make_cos_sin(a, pos)
+            if cos is not None:
+                q = _rotate(a, q, cos, sin)
+                k = _rotate(a, k, cos, sin)
+            k_t, v_t = k[:, 0], v[:, 0]  # (B, Hkv, D)
+            # land the step's token KV (in-program batched scatter)
+            k_store = k_store.at[wframe, li, :, wslot, :].set(
+                k_t.astype(k_store.dtype))
+            v_store = v_store.at[wframe, li, :, wslot, :].set(
+                v_t.astype(v_store.dtype))
+            o = kernel_ops.paged_attention(
+                q[:, 0], k_store[:, li], v_store[:, li], block_table,
+                page_pos=page_start, q_pos=q_pos, window=a.window,
+            )  # (B, H, D)
+            y = nn.dense(pa["attn"]["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+            if "base" in p:
+                lora = p["lora"]
+                y = y + nn.dense({"w": lora["ob"]}, nn.dense({"w": lora["oa"]},
+                    nn.dense({"w": lora["qb"]}, nn.dense({"w": lora["qa"]}, h))))
+            x = x + y
+            if spec.has_ffn:
+                h2 = nn.rmsnorm(pa["norm2"], x)
+                if spec.moe is not None:
+                    y2, _ = moe_fwd(pa["moe"], spec.moe, h2)
+                else:
+                    y2 = ffn_fwd(pa["ffn"], h2, spec.ffn_kind)
+                x = x + y2
+            k_layers.append(k_t)
+        h = nn.rmsnorm(params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            logits = h @ params["embed"]["table"].T.astype(h.dtype)
+        else:
+            logits = nn.dense(params["lm_head"], h)
+        toks_out = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        # incremental page-key summaries (padded lanes hit the trash slot)
+        k_all = jnp.stack(k_layers, axis=1).astype(jnp.float32)  # (B,L,Hkv,D)
+        ksum = ksum.at[slot_ids, gi].add(k_all)
+        kcnt = kcnt.at[slot_ids, gi].add(1.0)
+        return toks_out, k_store, v_store, ksum, kcnt
+
+    def _score_impl(self, probe_params, ksum, kcnt, toks, slot_ids):
+        """Query·page-key-summary relevance for every (seq, page)."""
+        embed_p, norm1_p, wq_p = probe_params
+        a0 = self.specs[0].attn
+        B = toks.shape[0]
+        x = nn.embed(embed_p, toks[:, None])
+        qp = nn.dense(wq_p, nn.rmsnorm(norm1_p, x))
+        qm = qp.reshape(B, a0.n_kv_heads, -1, a0.head_dim).mean(axis=2)
+        means = ksum[slot_ids] / jnp.maximum(
+            kcnt[slot_ids], 1.0)[:, :, None, None, None]
+        return jnp.einsum("bhd,bmlhd->bm", qm.astype(jnp.float32), means)
 
     # ---------------------------------------------------------------- #
     def stats(self) -> Dict[str, Any]:

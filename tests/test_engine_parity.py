@@ -180,6 +180,7 @@ def test_vector_pool_invariants_after_migration_storm():
 # --------------------------------------------------------------------- #
 # speed: the reason the vectorized engine exists
 # --------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_vectorized_engine_speedup_100k_pages():
     """A 100k-page multi-tenant trace: vectorized >= 10x reference pages/s.
 

@@ -77,6 +77,49 @@ def test_paged_attention_sweep(B, H, Hkv, P, MP, D, dtype):
     )
 
 
+@pytest.mark.parametrize("window", [None, 20])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_position_mode(dtype, window):
+    """Position-mode masking (sparse page subsets + sliding window) —
+    the batched serving plane's kernel configuration."""
+    from repro.kernels.paged_attention import PAD_PAGE_POS
+
+    B, H, Hkv, P, MP, D, F = 2, 4, 2, 8, 4, 32, 24
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = rand(ks[0], (B, H, D), dtype)
+    kp = rand(ks[1], (F, Hkv, P, D), dtype)
+    vp = rand(ks[2], (F, Hkv, P, D), dtype)
+    bt = jax.random.randint(ks[3], (B, MP), 0, F)
+    # sparse page subsets: non-contiguous starts, one padded entry
+    page_pos = jnp.asarray(
+        [[0, 16, 40, PAD_PAGE_POS], [8, 24, 32, 47]], jnp.int32)
+    q_pos = jnp.asarray([45, 49], jnp.int32)
+    out = paged_attention(q, kp, vp, bt, page_pos=page_pos, q_pos=q_pos,
+                          window=window, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, page_pos=page_pos,
+                                   q_pos=q_pos, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_paged_attention_position_matches_length_mode():
+    """On a dense page prefix the two masking modes agree exactly."""
+    B, H, Hkv, P, MP, D, F = 2, 8, 4, 8, 4, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = rand(ks[0], (B, H, D), jnp.float32)
+    kp = rand(ks[1], (F, Hkv, P, D), jnp.float32)
+    vp = rand(ks[2], (F, Hkv, P, D), jnp.float32)
+    bt = jax.random.randint(ks[3], (B, MP), 0, F)
+    lengths = jnp.asarray([13, 30], jnp.int32)
+    page_pos = jnp.broadcast_to(jnp.arange(MP) * P, (B, MP)).astype(jnp.int32)
+    o_len = paged_attention(q, kp, vp, bt, lengths, interpret=True)
+    o_pos = paged_attention(q, kp, vp, bt, page_pos=page_pos,
+                            q_pos=lengths - 1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_len), np.asarray(o_pos))
+
+
 @pytest.mark.parametrize(
     "n,f,seed",
     [(1, 8, 0), (4, 16, 7), (8, 24, 42), (3, 12, 100), (2, 9, 55),

@@ -66,6 +66,7 @@ def test_smoke_forward_and_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_fwd_decode_parity(arch):
     """Teacher-forced decode matches the full forward (exact caches)."""
     cfg = get_smoke_config(arch)
@@ -107,6 +108,7 @@ def test_chunked_ce_matches_full_loss():
     assert err < 1e-4, f"chunked-CE grads diverge: {err}"
 
 
+@pytest.mark.slow
 def test_rolling_window_cache_matches_full():
     """gemma3's rolling window cache == full cache with window mask."""
     cfg = get_smoke_config("gemma3-4b")  # window=8 in smoke

@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import Tier, TppConfig
+from repro.core import PageType, Tier, TppConfig
 from repro.models.model import decode_step, init_decode_state, init_params
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import AdmissionError, EngineConfig, ServingEngine
 
 
 @pytest.fixture(scope="module")
@@ -95,6 +95,69 @@ class TestTiering:
         # migrations moved real bytes
         if vs.pgdemote_total + vs.pgpromote_total > 0:
             assert eng.kv.migrated_bytes > 0
+
+
+class TestLifecycle:
+    @pytest.mark.parametrize("plane", ["reference", "batched"])
+    def test_resume_retypes_tail_anon(self, tiny, plane):
+        """pause→resume must hand the unsealed tail back to ANON, or
+        §5.4 type-aware allocation misclassifies every later write."""
+        cfg, params = tiny
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=32, num_slow=32, topk_pages=None,
+            data_plane=plane))
+        rid = eng.add_request(
+            list(np.random.default_rng(4).integers(0, cfg.vocab, 10)),
+            max_new=12)
+        eng.step()
+        eng.pause(rid)
+        pages = eng.kv.pool.pages
+        seq = eng.seqs[rid]
+        assert all(pages[p].page_type == PageType.FILE for p in seq.pages)
+        eng.resume(rid)
+        assert pages[seq.pages[-1]].page_type == PageType.ANON, \
+            "unsealed tail must resume as the hot decode page"
+        assert all(pages[p].page_type == PageType.FILE
+                   for p in seq.pages[:-1]), "sealed prefix stays FILE"
+        eng.step()  # decode continues with correctly-typed writes
+        assert pages[seq.pages[-1]].page_type == PageType.ANON
+
+    def test_finish_releases_request(self, tiny):
+        """finish() must not leak Request entries in a long-running
+        engine; it hands the finished request back to the caller."""
+        cfg, params = tiny
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=32, num_slow=32, topk_pages=None))
+        rid = eng.add_request(
+            list(np.random.default_rng(5).integers(0, cfg.vocab, 6)),
+            max_new=3)
+        for _ in range(3):
+            eng.step()
+        req = eng.finish(rid)
+        assert req.rid == rid and len(req.out) == 3 and req.done
+        assert rid not in eng.requests, "finished Request must be dropped"
+        assert rid not in eng.seqs
+        # the engine keeps admitting/finishing without growth
+        for _ in range(3):
+            r = eng.add_request([1, 2, 3], max_new=1)
+            eng.step()
+            eng.finish(r)
+        assert len(eng.requests) == 0 and len(eng.seqs) == 0
+        eng.kv.pool.check_invariants()
+
+    @pytest.mark.parametrize("plane", ["reference", "batched"])
+    def test_max_seqs_admission(self, tiny, plane):
+        cfg, params = tiny
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=64, num_slow=32, topk_pages=None,
+            max_seqs=2, data_plane=plane))
+        r0 = eng.add_request([1, 2, 3], max_new=2)
+        eng.add_request([4, 5, 6], max_new=2)
+        with pytest.raises(AdmissionError):
+            eng.add_request([7, 8, 9], max_new=2)
+        eng.finish(r0)  # freeing a slot re-opens admission
+        r2 = eng.add_request([7, 8, 9], max_new=2)
+        assert eng.step()[r2] is not None
 
 
 class TestExpertTiering:

@@ -1,0 +1,167 @@
+"""Data-plane parity: the batched plane must be an exact drop-in.
+
+The reference plane (one sequence at a time, per-layer Python loops,
+eager per-page migration copies) is the executable specification; the
+batched plane (one jitted call per step, Pallas-op data plane, staged
+interval migration batches) must reproduce its greedy tokens, migration
+activity, VmStat trajectory, and final page placement — across
+pause/resume, finish, admission, and both attention modes.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import Tier, TppConfig
+from repro.models.model import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def windowed():
+    cfg = get_smoke_config("gemma3-4b")  # 5:1 sliding-window pattern
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+BASE = dict(
+    page_size=4, num_fast=10, num_slow=64, recent_pages=1,
+    tpp=TppConfig(demote_budget=16, promote_budget=8),
+)
+
+
+def lifecycle_trace(cfg, params, ecfg):
+    """Run a pause/resume/finish lifecycle; return everything observable."""
+    eng = ServingEngine(cfg, params, ecfg, seed=0)
+    rng = np.random.default_rng(7)
+    rids = [eng.add_request(list(rng.integers(0, cfg.vocab, n)), max_new=40)
+            for n in (30, 17, 9)]
+    tokens, stats = [], []
+    for _ in range(6):
+        tokens.append(eng.step())
+    stats.append(eng.stats())
+    eng.pause(rids[0])
+    for _ in range(8):
+        tokens.append(eng.step())
+    stats.append(eng.stats())
+    eng.resume(rids[0])
+    for _ in range(6):
+        tokens.append(eng.step())
+    finished = eng.finish(rids[1])
+    for _ in range(6):
+        tokens.append(eng.step())
+    stats.append(eng.stats())
+    tiers = {rid: [int(eng.kv.pool.pages[p].tier) for p in eng.seqs[rid].pages]
+             for rid in eng.seqs}
+    types = {rid: [int(eng.kv.pool.pages[p].page_type) for p in eng.seqs[rid].pages]
+             for rid in eng.seqs}
+    vm = eng.kv.pool.vmstat.as_dict()
+    eng.kv.pool.check_invariants()
+    return {
+        "tokens": tokens,
+        "stats": stats,
+        "finished_out": finished.out,
+        "tiers": tiers,
+        "types": types,
+        "vmstat": vm,
+    }
+
+
+@pytest.mark.parametrize("topk", [2, None], ids=["topk", "exact"])
+def test_lifecycle_parity(tiny, topk):
+    cfg, params = tiny
+    ref = lifecycle_trace(cfg, params, EngineConfig(
+        data_plane="reference", topk_pages=topk, **BASE))
+    bat = lifecycle_trace(cfg, params, EngineConfig(
+        data_plane="batched", topk_pages=topk, **BASE))
+    assert bat["tokens"] == ref["tokens"]
+    assert bat["stats"] == ref["stats"]
+    assert bat["finished_out"] == ref["finished_out"]
+    assert bat["tiers"] == ref["tiers"]
+    assert bat["types"] == ref["types"]
+    assert bat["vmstat"] == ref["vmstat"]
+
+
+def test_lifecycle_parity_windowed(windowed):
+    """Sliding-window layers exercise the kernel's position-mode mask."""
+    cfg, params = windowed
+    ref = lifecycle_trace(cfg, params, EngineConfig(
+        data_plane="reference", topk_pages=2, **BASE))
+    bat = lifecycle_trace(cfg, params, EngineConfig(
+        data_plane="batched", topk_pages=2, **BASE))
+    assert bat["tokens"] == ref["tokens"]
+    assert bat["vmstat"] == ref["vmstat"]
+    assert bat["tiers"] == ref["tiers"]
+
+
+def test_batched_matches_dense_reference(tiny):
+    """Exact-attention batched decode equals the dense (unpaged) model."""
+    from test_serving import dense_reference
+
+    cfg, params = tiny
+    prompt = list(np.random.default_rng(3).integers(0, cfg.vocab, 9))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=64, num_slow=8, topk_pages=None,
+        data_plane="batched"))
+    rid = eng.add_request(prompt, max_new=5)
+    got = [eng.step()[rid] for _ in range(5)]
+    assert got == dense_reference(cfg, params, prompt, 5)
+
+
+def test_batched_single_token_prompt(tiny):
+    """Edge: no prefill pages — the first decode writes page 0."""
+    cfg, params = tiny
+    outs = {}
+    for plane in ("reference", "batched"):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=16, num_slow=16, topk_pages=2,
+            recent_pages=1, data_plane=plane))
+        rid = eng.add_request([5], max_new=6)
+        outs[plane] = [eng.step()[rid] for _ in range(6)]
+    assert outs["batched"] == outs["reference"]
+
+
+def test_batched_migration_payload_integrity(tiny):
+    """Staged gather/scatter batches must preserve payloads bit-for-bit:
+    decode results stay exact even when pages migrate every interval."""
+    from test_serving import dense_reference
+
+    cfg, params = tiny
+    prompt = list(np.random.default_rng(1).integers(0, cfg.vocab, 24))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=8, num_slow=32, topk_pages=None,
+        data_plane="batched",
+        tpp=TppConfig(demote_budget=16, promote_budget=8)))
+    rid = eng.add_request(prompt, max_new=6)
+    got = [eng.step()[rid] for _ in range(6)]
+    assert eng.kv.pool.used_frames(Tier.SLOW) > 0, "test needs tiering"
+    assert got == dense_reference(cfg, params, prompt, 6)
+    eng.kv.pool.check_invariants()
+
+
+def test_batched_policy_baselines(tiny):
+    """Parity is not TPP-specific — baseline policies drive the same
+    staged migration machinery."""
+    cfg, params = tiny
+    for policy in ("linux", "numa_balancing"):
+        traces = {}
+        for plane in ("reference", "batched"):
+            eng = ServingEngine(cfg, params, EngineConfig(
+                page_size=4, num_fast=8, num_slow=32, topk_pages=2,
+                recent_pages=1, policy=policy, data_plane=plane), seed=0)
+            rid = eng.add_request(
+                list(np.random.default_rng(5).integers(0, cfg.vocab, 20)),
+                max_new=10)
+            traces[plane] = ([eng.step()[rid] for _ in range(10)],
+                             eng.stats())
+        assert traces["batched"] == traces["reference"], policy

@@ -15,6 +15,7 @@ from repro.launch.train import make_train_step, train_loop
 from repro.optim.adamw import AdamWConfig
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     cfg = get_smoke_config("tinyllama-1.1b")
     rep = train_loop(cfg, DataConfig(seq_len=64, global_batch=4),
@@ -23,6 +24,7 @@ def test_loss_decreases():
     assert rep.skipped == 0
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalence():
     """accum=2 must match accum=1 on the same global batch (up to fp)."""
     cfg = get_smoke_config("tinyllama-1.1b")
@@ -44,6 +46,7 @@ def test_grad_accumulation_equivalence():
     assert err < 5e-5, f"accumulated params diverge: {err}"
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_exact():
     """kill/restart: resumed run reproduces the uninterrupted run."""
     cfg = get_smoke_config("tinyllama-1.1b")
@@ -102,6 +105,7 @@ def test_checkpoint_treedef_mismatch_rejected():
         shutil.rmtree(d, ignore_errors=True)
 
 
+@pytest.mark.slow
 def test_nan_containment():
     """A poisoned batch is skipped, params unchanged, counter ticks."""
     cfg = get_smoke_config("tinyllama-1.1b")
