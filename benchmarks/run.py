@@ -3,11 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+                                          [--skip-slow]
                                           [--engine reference|vectorized]
 
-``--engine`` selects the placement engine for the simulator-backed
-benchmarks (results are identical by construction — see
-``tests/test_engine_parity.py``; the vectorized engine is the fast one).
+``--only`` runs a comma-separated subset of suites; ``--skip-slow``
+drops the long-running ones (the fast lane CI and developers iterate
+on).  ``--engine`` selects the placement engine for the
+simulator-backed benchmarks (results are identical by construction —
+see ``tests/test_engine_parity.py``; the vectorized engine is the fast
+one).
 """
 
 from __future__ import annotations
@@ -19,17 +23,20 @@ import time
 
 from repro.core.engine import ENGINES
 
+# (key, module, slow) — slow suites are multi-minute end-to-end sweeps;
+# the rest finish in seconds and form the --skip-slow fast lane.
 MODULES = [
-    ("table1", "benchmarks.table1_throughput"),
-    ("chameleon", "benchmarks.chameleon_heatmap"),
-    ("ablations", "benchmarks.fig_ablation"),
-    ("table2", "benchmarks.table2_type_aware"),
-    ("table3", "benchmarks.table3_tmo"),
-    ("expert_tier", "benchmarks.expert_tiering"),
-    ("engine", "benchmarks.engine_bench"),
-    ("serving", "benchmarks.serving_bench"),
-    ("kernels", "benchmarks.kernel_bench"),
-    ("roofline", "benchmarks.roofline"),
+    ("table1", "benchmarks.table1_throughput", True),
+    ("chameleon", "benchmarks.chameleon_heatmap", False),
+    ("ablations", "benchmarks.fig_ablation", True),
+    ("table2", "benchmarks.table2_type_aware", False),
+    ("table3", "benchmarks.table3_tmo", True),
+    ("expert_tier", "benchmarks.expert_tiering", True),
+    ("engine", "benchmarks.engine_bench", True),
+    ("qos", "benchmarks.qos_bench", False),
+    ("serving", "benchmarks.serving_bench", True),
+    ("kernels", "benchmarks.kernel_bench", False),
+    ("roofline", "benchmarks.roofline", True),
 ]
 
 
@@ -38,19 +45,30 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
-                         + ",".join(k for k, _ in MODULES))
+                         + ",".join(k for k, _, _ in MODULES))
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the multi-minute suites ("
+                         + ",".join(k for k, _, s in MODULES if s) + ")")
     ap.add_argument("--engine", default="reference", choices=list(ENGINES),
                     help="placement engine for simulator-backed benchmarks")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {k for k, _, _ in MODULES}
+        if unknown:
+            ap.error(f"unknown suite(s) {sorted(unknown)}; choose from "
+                     + ",".join(k for k, _, _ in MODULES))
 
     import importlib
 
     print("name,us_per_call,derived")
     t0 = time.time()
-    for key, modname in MODULES:
+    failed: list = []
+    for key, modname, slow in MODULES:
         if only and key not in only:
             continue
+        if args.skip_slow and slow and not only:
+            continue  # an explicit --only overrides --skip-slow
         try:
             mod = importlib.import_module(modname)
             kwargs = {"quick": args.quick}
@@ -60,7 +78,10 @@ def main() -> None:
                 print(line, flush=True)
         except Exception as e:  # keep the suite going; a failure is visible
             print(f"{key}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            failed.append(key)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:  # after the full sweep, so one bad suite never hides others
+        sys.exit(f"benchmark suite(s) failed: {','.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,17 @@
-"""Serving data-plane benchmark — reference vs batched decode.
+"""Serving data-plane benchmark — reference vs batched decode, plus QoS.
 
 Decodes the same request mix through both data planes at several batch
 sizes and reports steady-state decode throughput (tokens/sec, prefill
 and jit warm-up excluded).  Results land in ``BENCH_serving.json`` for
 the CI trendline; greedy-token parity between the planes is asserted on
 every run — a speedup that changes results is a bug, not a win.
+
+A second section runs the **QoS noisy-neighbor** scenario: one
+latency-critical decode stream shares a small fast tier with a churny
+batch tenant (sequences constantly finishing and re-admitting).
+Tenant-blind TPP lets the churn evict the stream's hot pages; with the
+QoS arbiter armed (priority-weighted static shares + per-tenant
+promotion token buckets) the stream holds its fast-tier residency.
 
   PYTHONPATH=src python -m benchmarks.serving_bench
 """
@@ -19,8 +26,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import TppConfig
+from repro.core import Tier, TppConfig
 from repro.models.model import init_params
+from repro.qos import QosConfig
 from repro.serving import EngineConfig, ServingEngine
 
 MODEL = "tinyllama-1.1b"
@@ -64,6 +72,40 @@ def _decode_run(cfg, params, plane: str, batch: int, steps: int):
     return dt, tokens
 
 
+# ---- QoS noisy-neighbor scenario ----------------------------------- #
+QOS_STEPS = 48
+QOS_CHURN_EVERY = 8  # rotate one noisy sequence every N steps
+
+
+def _qos_noisy_neighbor(cfg, params, qos, steps: int):
+    """One latency-critical stream vs a churny batch tenant; returns the
+    stream's final fast-tier residency fraction + engine stats."""
+    eng = ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=24, num_slow=256,
+        topk_pages=4, recent_pages=2, max_seqs=8,
+        data_plane="batched",
+        tpp=TppConfig(demote_budget=16, promote_budget=8),
+        qos=qos,
+    ), seed=0)
+    rng = np.random.default_rng(0)
+    prompt = lambda: list(rng.integers(0, cfg.vocab, PROMPT_LEN))  # noqa: E731
+    lc = eng.add_request(prompt(), max_new=10_000,
+                         qos_class="latency_critical", tenant=0)
+    noisy = [eng.add_request(prompt(), max_new=10_000,
+                             qos_class="batch", tenant=1) for _ in range(5)]
+    for step in range(steps):
+        eng.step()
+        if step % QOS_CHURN_EVERY == QOS_CHURN_EVERY - 1:
+            eng.finish(noisy.pop(0))
+            noisy.append(eng.add_request(prompt(), max_new=10_000,
+                                         qos_class="batch", tenant=1))
+    seq = eng.seqs[lc]
+    n_fast = sum(
+        1 for pid in seq.pages if eng.kv.pool.pages[pid].tier == Tier.FAST
+    )
+    return n_fast / len(seq.pages), eng.stats()
+
+
 def run(quick: bool = False) -> List[str]:
     steps = 8 if quick else DECODE_STEPS
     batches = BATCH_SIZES[:2] if quick else BATCH_SIZES
@@ -97,12 +139,33 @@ def run(quick: bool = False) -> List[str]:
         results[str(batch)] = row
         out.append(f"serving/speedup_b{batch},0.0,x{speedup:.1f}")
 
+    # ---- QoS noisy neighbor: latency-critical vs churny batch ------- #
+    qos_steps = 24 if quick else QOS_STEPS
+    qos_results = {}
+    for label, qos in (
+        ("tenant_blind", None),
+        ("qos", QosConfig(mode="static", promote_tokens_per_interval=16.0)),
+    ):
+        residency, stats = _qos_noisy_neighbor(cfg, params, qos, qos_steps)
+        qos_results[label] = {
+            "lc_fast_residency": round(residency, 4),
+            "local_fraction": round(stats["local_fraction"], 4),
+            "demoted": stats["demoted"],
+            "promoted": stats["promoted"],
+        }
+        out.append(f"serving/qos_{label},0.0,lc_fast_residency={residency:.3f}")
+
     payload = {
         "model": MODEL,
         "prompt_len": PROMPT_LEN,
         "decode_steps": steps,
         "batch_sizes": list(batches),
         "results": results,
+        "qos_noisy_neighbor": {
+            "steps": qos_steps,
+            "churn_every": QOS_CHURN_EVERY,
+            **qos_results,
+        },
     }
     with open("BENCH_serving.json", "w") as f:
         json.dump(payload, f, indent=2)

@@ -13,6 +13,10 @@ identical tokens and placement, ~an order of magnitude slower (see
 benchmarks/serving_bench.py).
 
   PYTHONPATH=src python examples/serve_tiered.py [--data-plane reference]
+                                                 [--short]
+
+``--short`` shrinks the prompts and phase lengths for a fast headless
+smoke run (the CI examples lane).
 """
 
 import argparse
@@ -38,7 +42,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--data-plane", default="batched",
                     choices=["reference", "batched"])
+    ap.add_argument("--short", action="store_true",
+                    help="small prompts / short phases (CI smoke lane)")
     args = ap.parse_args()
+    prompt_len, max_new = (24, 48) if args.short else (48, 96)
+    warm, paused, resumed = (6, 10, 8) if args.short else (12, 20, 16)
     cfg = get_smoke_config("gemma3-4b")  # 5:1 local:global pattern
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(
@@ -52,19 +60,20 @@ def main() -> None:
     )
     rng = np.random.default_rng(0)
     rids = [
-        eng.add_request(list(rng.integers(0, cfg.vocab, 48)), max_new=96)
+        eng.add_request(list(rng.integers(0, cfg.vocab, prompt_len)),
+                        max_new=max_new)
         for _ in range(3)
     ]
-    print(f"3 sessions × 48-token prompts; fast tier: 24 pages × "
+    print(f"3 sessions × {prompt_len}-token prompts; fast tier: 24 pages × "
           f"{eng.ecfg.page_size} tokens (total KV ≫ fast tier); "
           f"data plane: {args.data_plane}")
 
-    for _ in range(12):
+    for _ in range(warm):
         eng.step()
     phase_stats(eng, "warm-up")
 
     eng.pause(rids[0])
-    for _ in range(20):
+    for _ in range(paused):
         eng.step()
     phase_stats(eng, "s0 paused")
     paused_slow = sum(
@@ -75,7 +84,7 @@ def main() -> None:
           f"pages demoted to the slow tier")
 
     eng.resume(rids[0])
-    for _ in range(16):
+    for _ in range(resumed):
         eng.step()
     phase_stats(eng, "s0 resumed")
 

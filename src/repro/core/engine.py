@@ -179,6 +179,10 @@ class VectorPagePool:
         self.step = 0
         self.on_migrate = on_migrate
         self.on_evict = on_evict
+        # Multi-tenant QoS hook (repro.qos): None = tenant-blind (today's
+        # behaviour), TenantAccounting = telemetry only, QosArbiter =
+        # telemetry + victim ordering + promotion admission.
+        self.qos = None
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
 
         cap = self.INITIAL_CAPACITY
@@ -440,11 +444,14 @@ class VectorPagePool:
         return pids, tiers
 
     def free(self, pid: int) -> None:
+        tier = int(self._tier[pid])
         self._lru_remove(self._lid[pid], pid)
-        self._stacks[Tier(int(self._tier[pid]))].push(int(self._frame[pid]))
+        self._stacks[Tier(tier)].push(int(self._frame[pid]))
         self._live[pid] = False
         self._tier[pid] = _NO_TIER
         self.vmstat.pgfree += 1
+        if self.qos is not None:
+            self.qos.note_free(pid, tier)
 
     # ------------------------------------------------------------------ #
     # access path
@@ -552,6 +559,8 @@ class VectorPagePool:
         ptype = self._ptype[pid].item()
         self._lru_add_head(4 + ptype * 2, pid)  # (SLOW, ptype, inactive)
         self.vmstat.demote_success(ptype == 0)  # PageType.ANON
+        if self.qos is not None:
+            self.qos.note_demote(pid)
         return DemoteFail.NONE
 
     def promote_page(self, pid: int) -> PromoteFail:
@@ -560,13 +569,20 @@ class VectorPagePool:
         if flags & _UNEVICTABLE:
             self.vmstat.promote_fail(PromoteFail.PINNED)
             return PromoteFail.PINNED
+        if self.qos is not None and not self.qos.admit_promotion(pid):
+            self.vmstat.promote_fail(PromoteFail.QOS)
+            return PromoteFail.QOS
         if not self._move(pid, Tier.FAST):
+            if self.qos is not None:
+                self.qos.refund_promotion(pid)
             self.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
             return PromoteFail.TARGET_LOW_MEM
         self._flags[pid] = (flags & _NOT_DEMOTED) | _ACTIVE
         ptype = self._ptype[pid].item()
         self._lru_add_head(ptype * 2 + 1, pid)  # (FAST, ptype, active)
         self.vmstat.promote_success(ptype == 0)  # PageType.ANON
+        if self.qos is not None:
+            self.qos.note_promote(pid)
         return PromoteFail.NONE
 
     def demote_pages(self, pids: Sequence[int]) -> Tuple[int, List[int], int]:
@@ -613,6 +629,8 @@ class VectorPagePool:
                 self._lru_add_head_batch(6, ok[~anon_sel])  # SLOW/FILE/inact
             self.vmstat.demote_success(True, n_anon)
             self.vmstat.demote_success(False, k - n_anon)
+            if self.qos is not None:
+                self.qos.note_demote_many(ok)
         if overflow:
             self.vmstat.demote_fail(DemoteFail.SLOW_FULL, len(overflow))
         return k, overflow, 0
@@ -627,6 +645,12 @@ class VectorPagePool:
     # reclaim-candidate scan
     # ------------------------------------------------------------------ #
     def scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]:
+        out = self._scan_reclaim_candidates(tier, nr_to_scan)
+        if self.qos is not None:
+            out = self.qos.order_demotion_victims(out)
+        return out
+
+    def _scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]:
         out: List[int] = []
         sizes = {
             pt: self._lens[_list_id(int(tier), int(pt), False)] for pt in PageType
@@ -721,7 +745,10 @@ class VectorPagePool:
         order = np.lexsort(
             (pids, self._last_touch[pids], self._touch_count[pids])
         )[:limit]
-        return [int(p) for p in pids[order]]
+        out = [int(p) for p in pids[order]]
+        if self.qos is not None:
+            out = self.qos.order_demotion_victims(out)
+        return out
 
     def fallback_slow_victim(self) -> Optional[int]:
         n = self._next_pid

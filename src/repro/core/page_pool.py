@@ -98,6 +98,10 @@ class PagePool:
         # dst_frame) so the engine can mirror the copy in device buffers.
         self.on_migrate = on_migrate
         self.on_evict = on_evict
+        # Multi-tenant QoS hook (repro.qos): None = tenant-blind (today's
+        # behaviour), TenantAccounting = telemetry only, QosArbiter =
+        # telemetry + victim ordering + promotion admission.
+        self.qos = None
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
 
     # ------------------------------------------------------------------ #
@@ -193,6 +197,8 @@ class PagePool:
         self.lru[page.tier].discard(pid, page.page_type)
         self._free[page.tier].append(page.frame)
         self.vmstat.pgfree += 1
+        if self.qos is not None:
+            self.qos.note_free(pid, int(page.tier))
 
     # ------------------------------------------------------------------ #
     # access path
@@ -316,6 +322,8 @@ class PagePool:
         page.flags &= ~(PageFlags.ACTIVE | PageFlags.ACCESSED)
         self.lru[Tier.SLOW].insert(pid, page.page_type, active=False)
         self.vmstat.demote_success(page.page_type == PageType.ANON)
+        if self.qos is not None:
+            self.qos.note_demote(pid)
         return DemoteFail.NONE
 
     def promote_page(self, pid: int) -> PromoteFail:
@@ -330,7 +338,12 @@ class PagePool:
         if page.pinned:
             self.vmstat.promote_fail(PromoteFail.PINNED)
             return PromoteFail.PINNED
+        if self.qos is not None and not self.qos.admit_promotion(pid):
+            self.vmstat.promote_fail(PromoteFail.QOS)
+            return PromoteFail.QOS
         if not self._move(page, Tier.FAST):
+            if self.qos is not None:
+                self.qos.refund_promotion(pid)
             self.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
             return PromoteFail.TARGET_LOW_MEM
         page.flags &= ~PageFlags.DEMOTED  # PG_demoted cleared on promotion
@@ -338,6 +351,8 @@ class PagePool:
         page.flags |= PageFlags.ACTIVE
         self.lru[Tier.FAST].insert(pid, page.page_type, active=True)
         self.vmstat.promote_success(page.page_type == PageType.ANON)
+        if self.qos is not None:
+            self.qos.note_promote(pid)
         return PromoteFail.NONE
 
     def demote_pages(self, pids: Sequence[int]) -> Tuple[int, List[int], int]:
@@ -369,7 +384,16 @@ class PagePool:
         Paper §5.1: *"along with inactive file pages, we scan inactive
         anon pages for reclamation candidate selection"* — both types are
         scanned, proportionally to list size (kernel scan balance).
+        With a QoS arbiter attached, candidates from over-quota tenants
+        are moved to the front (demoted first) — a pure reorder of the
+        scan result, identical across engines.
         """
+        out = self._scan_reclaim_candidates(tier, nr_to_scan)
+        if self.qos is not None:
+            out = self.qos.order_demotion_victims(out)
+        return out
+
+    def _scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]:
         node = self.lru[tier]
         out: List[int] = []
         sizes = {pt: node.n_inactive(pt) for pt in PageType}
@@ -451,7 +475,10 @@ class PagePool:
              if p.tier == Tier.FAST and not p.pinned),
             key=lambda p: (p.touch_count, p.last_touch_step),
         )[:limit]
-        return [p.pid for p in victims]
+        out = [p.pid for p in victims]
+        if self.qos is not None:
+            out = self.qos.order_demotion_victims(out)
+        return out
 
     def fallback_slow_victim(self) -> Optional[int]:
         """Any unpinned slow page (OOM last resort), oldest pid first."""

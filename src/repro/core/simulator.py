@@ -63,9 +63,17 @@ class SimResult:
     # are far from 100% memory-bound; β captures that (MLP/compute overlap).
     mem_stall_frac: float = 0.25
     # Per-tenant vmstat attribution (multi-tenant traces only):
-    # tenant id -> {"access_fast", "access_slow", "allocated", "refaults"}.
+    # tenant id -> {"access_fast", "access_slow", "allocated", "refaults",
+    # "promoted", "demoted"}.
     per_tenant: Optional[Dict[int, Dict[str, int]]] = None
     tenant_names: Optional[List[str]] = None
+    # Modeled cost knobs (echoed from the simulator so the fairness
+    # metrics below are self-contained).
+    slow_cost: float = 2.0
+    refault_cost: float = 50.0
+    # QoS arbitration summary (quotas, violations, denials) when a
+    # QosArbiter drove this run; None otherwise.
+    qos: Optional[Dict] = None
 
     @property
     def avg_access_cost(self) -> float:
@@ -123,6 +131,51 @@ class SimResult:
             }
         return out
 
+    # -- fairness metrics (Equilibria-style multi-tenant evaluation) ---- #
+    def tenant_slowdowns(self) -> Optional[Dict[int, float]]:
+        """Per-tenant modeled memory slowdown (ideal all-fast = 1.0).
+
+        ``(fast + slow·slow_cost + refaults·refault_cost) / accesses`` —
+        the per-tenant analogue of :attr:`avg_access_cost`.
+        """
+        if self.per_tenant is None:
+            return None
+        out: Dict[int, float] = {}
+        for tid, acc in sorted(self.per_tenant.items()):
+            n = acc["access_fast"] + acc["access_slow"]
+            t = (acc["access_fast"] + acc["access_slow"] * self.slow_cost
+                 + acc.get("refaults", 0) * self.refault_cost)
+            out[tid] = round(t / n, 4) if n else 1.0
+        return out
+
+    def jains_fairness(self) -> Optional[float]:
+        """Jain's index over per-tenant normalized throughput (1/slowdown).
+
+        1.0 = perfectly even slowdowns; 1/n = one tenant absorbs all of
+        the tiering penalty.
+        """
+        slow = self.tenant_slowdowns()
+        if not slow:
+            return None
+        x = np.asarray([1.0 / v for v in slow.values()], np.float64)
+        return round(float((x.sum() ** 2) / (len(x) * (x * x).sum())), 4)
+
+    def fairness_summary(self) -> Optional[Dict]:
+        slow = self.tenant_slowdowns()
+        if slow is None:
+            return None
+        names = self.tenant_names or []
+        return {
+            "slowdowns": {
+                (f"{t}:{names[t]}" if t < len(names) else str(t)): v
+                for t, v in slow.items()
+            },
+            "jains_index": self.jains_fairness(),
+            "quota_violation_intervals": (
+                self.qos.get("quota_violation_intervals") if self.qos else None
+            ),
+        }
+
 
 class TieredSimulator:
     """Drive (trace × pool × policy) and account modeled time."""
@@ -142,6 +195,7 @@ class TieredSimulator:
         profiler: Optional[Chameleon] = None,
         trace=None,
         engine: str = "reference",
+        qos=None,
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
@@ -169,6 +223,22 @@ class TieredSimulator:
         self._evicted_pids: set = set()
         self._last_evicted: Optional[int] = None
         self.pool.on_evict = self._note_evict
+        # -- multi-tenant QoS (repro.qos) ----------------------------- #
+        # ``qos`` is a QosConfig → full arbitration; with a plain
+        # multi-tenant trace a telemetry-only TenantAccounting is
+        # attached so per-tenant promote/demote attribution is always
+        # available.  Imports are lazy to keep repro.core importable
+        # from repro.qos without a cycle.
+        n_tenants = getattr(self.trace, "n_tenants", 1)
+        if qos is not None:
+            from repro.qos.arbiter import QosArbiter
+
+            self.pool.qos = QosArbiter(n_tenants, fast_frames, config=qos)
+        elif self._tenant_of is not None:
+            from repro.qos.accounting import TenantAccounting
+
+            self.pool.qos = TenantAccounting(n_tenants)
+        self._qos_counts = np.zeros(n_tenants, np.int64)
 
     def _note_evict(self, pid: int) -> None:
         self._evicted_pids.add(pid)
@@ -206,6 +276,8 @@ class TieredSimulator:
         demote_rate: List[int] = []
         alloc_fast_rate: List[int] = []
         tenant_of = self._tenant_of
+        qos = self.pool.qos
+        qos_counts = self._qos_counts
 
         for step_no in range(steps):
             ev = next(self.trace)
@@ -249,8 +321,13 @@ class TieredSimulator:
                     step_time += 1.0
                     fast_hits.append(pid)
                 if tenant_of is not None:
-                    acc = self._tenant_acc(tenant_of(idx))
+                    tid = tenant_of(idx)
+                    acc = self._tenant_acc(tid)
                     acc["access_slow" if tier == Tier.SLOW else "access_fast"] += 1
+                    if qos is not None:
+                        qos_counts[tid] += 1
+                elif qos is not None:
+                    qos_counts[0] += 1
                 step_ideal += 1.0
                 if self.profiler is not None:
                     prof_events.append((pid, self.pool.pages[pid].page_type))
@@ -258,6 +335,9 @@ class TieredSimulator:
                 self.profiler.record(prof_events)
 
             # -- policy (uniform protocol dispatch) ------------------- #
+            if qos is not None:
+                qos.note_access_counts(qos_counts)
+                qos_counts[:] = 0
             report = self.policy.step(slow_hits, fast_hits)
             step_time += (report.demoted + report.promoted) * self.migrate_cost
             if step_no >= measure_from:
@@ -275,6 +355,8 @@ class TieredSimulator:
 
             if (step_no + 1) % self.interval_steps == 0:
                 self.pool.end_interval()
+                if qos is not None:
+                    qos.end_interval()
                 if self.profiler is not None:
                     self.profiler.end_interval()
 
@@ -309,8 +391,11 @@ class TieredSimulator:
         self._ensure_idx_capacity(idx)
         self._v_pid_of[idx] = page.pid
         self._v_ptype_of[idx] = int(ptype)
+        tid = self._tenant_of(idx) if self._tenant_of is not None else 0
         if self._tenant_of is not None:
-            self._tenant_acc(self._tenant_of(idx))["allocated"] += 1
+            self._tenant_acc(tid)["allocated"] += 1
+        if self.pool.qos is not None:
+            self.pool.qos.register_page(page.pid, tid, int(page.tier))
         return page.pid
 
     def _run_vectorized(self, steps: int, measure_from: int) -> SimResult:
@@ -325,6 +410,8 @@ class TieredSimulator:
         slow_tier = np.int8(int(Tier.SLOW))
         tenant_arr = self._tenant_of_array
         n_tenants = getattr(self.trace, "n_tenants", 1)
+        qos = self.pool.qos
+        qos_counts = self._qos_counts
 
         for step_no in range(steps):
             ev = next(self.trace)
@@ -348,16 +435,20 @@ class TieredSimulator:
                     for a in allocs[i:j]:
                         self._alloc_idx_vec(a[0], pt)
                 else:
-                    pids, _tiers = placed
+                    pids, tiers = placed
                     self._ensure_idx_capacity(int(run_idx.max()))
                     self._v_pid_of[run_idx] = pids
                     self._v_ptype_of[run_idx] = np.int16(int(pt))
+                    run_tids = None
                     if tenant_arr is not None:
-                        tids = np.bincount(
-                            tenant_arr(run_idx), minlength=n_tenants
-                        )
+                        run_tids = tenant_arr(run_idx)
+                        tids = np.bincount(run_tids, minlength=n_tenants)
                         for tid in np.flatnonzero(tids):
                             self._tenant_acc(int(tid))["allocated"] += int(tids[tid])
+                    if qos is not None:
+                        qos.register_pages(
+                            pids, run_tids if run_tids is not None else 0, tiers
+                        )
                 i = j
 
             # -- frees ----------------------------------------------- #
@@ -419,6 +510,10 @@ class TieredSimulator:
                             acc = self._tenant_acc(int(tid))
                             acc["access_slow"] += int(slow_cnt[tid])
                             acc["access_fast"] += int(fast_cnt[tid])
+                        if qos is not None:
+                            qos_counts += slow_cnt + fast_cnt
+                    elif qos is not None:
+                        qos_counts[0] += n_chunk
                     if self.profiler is not None:
                         for p in chunk_pids.tolist():
                             prof_events.append((p, pool.ptype_of(p)))
@@ -450,9 +545,14 @@ class TieredSimulator:
                         step_time += 1.0
                         fast_parts.append(np.asarray([pid], np.int64))
                     if self._tenant_of is not None:
-                        acc = self._tenant_acc(self._tenant_of(idx))
+                        tid = self._tenant_of(idx)
+                        acc = self._tenant_acc(tid)
                         acc["access_slow" if tier == Tier.SLOW
                             else "access_fast"] += 1
+                        if qos is not None:
+                            qos_counts[tid] += 1
+                    elif qos is not None:
+                        qos_counts[0] += 1
                     step_ideal += 1.0
                     if self.profiler is not None:
                         prof_events.append((pid, pool.ptype_of(pid)))
@@ -470,6 +570,9 @@ class TieredSimulator:
             )
 
             # -- policy (uniform protocol dispatch) ------------------- #
+            if qos is not None:
+                qos.note_access_counts(qos_counts)
+                qos_counts[:] = 0
             report = self.policy.step(slow_hits.tolist(), fast_hits.tolist())
             step_time += (report.demoted + report.promoted) * self.migrate_cost
             if step_no >= measure_from:
@@ -487,6 +590,8 @@ class TieredSimulator:
 
             if (step_no + 1) % self.interval_steps == 0:
                 pool.end_interval()
+                if qos is not None:
+                    qos.end_interval()
                 if self.profiler is not None:
                     self.profiler.end_interval()
 
@@ -498,6 +603,15 @@ class TieredSimulator:
     def _result(self, steps, total_accesses, modeled_time, ideal_time,
                 local_frac, promote_rate, demote_rate,
                 alloc_fast_rate) -> SimResult:
+        qos = self.pool.qos
+        per_tenant = self._per_tenant if self._tenant_of is not None else None
+        if per_tenant is not None and qos is not None:
+            # fold the accounting ledger's migration attribution in, so
+            # per-tenant counters cover the full vmstat surface
+            for tid in range(qos.n_tenants):
+                acc = self._tenant_acc(tid)
+                acc["promoted"] = int(qos.promoted_total[tid])
+                acc["demoted"] = int(qos.demoted_total[tid])
         return SimResult(
             policy=self.policy_name,
             workload=self.workload,
@@ -510,8 +624,11 @@ class TieredSimulator:
             promote_rate=promote_rate,
             demote_rate=demote_rate,
             alloc_fast_rate=alloc_fast_rate,
-            per_tenant=self._per_tenant if self._tenant_of is not None else None,
+            per_tenant=per_tenant,
             tenant_names=getattr(self.trace, "tenant_names", None),
+            slow_cost=self.slow_cost,
+            refault_cost=self.refault_cost,
+            qos=qos.qos_summary() if qos is not None else None,
         )
 
     # ---------------------------------------------------------------- #
@@ -528,8 +645,11 @@ class TieredSimulator:
             page = self.pool.allocate(ptype)
         self._pid_of[idx] = page.pid
         self._ptype_of[idx] = ptype
+        tid = self._tenant_of(idx) if self._tenant_of is not None else 0
         if self._tenant_of is not None:
-            self._tenant_acc(self._tenant_of(idx))["allocated"] += 1
+            self._tenant_acc(tid)["allocated"] += 1
+        if self.pool.qos is not None:
+            self.pool.qos.register_page(page.pid, tid, int(page.tier))
 
     def _coldest_slow_page(self) -> Optional[int]:
         cands = self.pool.scan_reclaim_candidates(Tier.SLOW, 1)
@@ -551,12 +671,15 @@ def run_policy_comparison(
     total_pages: Optional[int] = None,
     measure_from: int = 0,
     engine: str = "reference",
+    qos=None,
 ) -> Dict[str, SimResult]:
     """Run the same trace under each policy + the ideal baseline (Table 1).
 
     ``workload`` may be a single workload name or a ``+``-joined
     multi-tenant mix; ``engine`` selects the reference or vectorized
-    placement engine (identical results, different speed).
+    placement engine (identical results, different speed); ``qos`` is an
+    optional :class:`~repro.qos.quota.QosConfig` applied to every policy
+    run (the ideal baseline stays unarbitrated — it has no slow tier).
     """
     results: Dict[str, SimResult] = {}
     for pol in policies:
@@ -570,6 +693,7 @@ def run_policy_comparison(
             seed=seed,
             trace=make_trace(workload, seed=seed, total_pages=total_pages),
             engine=engine,
+            qos=qos,
         )
         results[pol] = sim.run(steps, measure_from=measure_from)
     # ideal: all frames fast (sized for live peak incl. churn overshoot)

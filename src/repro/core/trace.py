@@ -252,6 +252,9 @@ class MultiTenantTrace:
             TraceGenerator(spec, seed=seed + t, total_pages=total_pages_each)
             for t, spec in enumerate(self.specs)
         ]
+        # A tenant whose underlying trace exhausts (finite replays) stops
+        # contributing events; the mix ends only when *all* tenants have.
+        self._exhausted = [False] * self.n_tenants
 
     # -------------------------------------------------------------- #
     def tenant_of(self, gidx: int) -> int:
@@ -271,11 +274,21 @@ class MultiTenantTrace:
         allocs: List[Tuple[int, PageType]] = []
         accesses: List[int] = []
         frees: List[int] = []
+        alive = False
         for t, gen in enumerate(self.tenants):
-            step = next(gen)
+            if self._exhausted[t]:
+                continue
+            try:
+                step = next(gen)
+            except StopIteration:
+                self._exhausted[t] = True
+                continue
+            alive = True
             allocs += [(self._g(i, t), pt) for i, pt in step.allocs]
             accesses += [self._g(i, t) for i in step.accesses]
             frees += [self._g(i, t) for i in step.frees]
+        if not alive:
+            raise StopIteration
         return TraceStep(allocs=allocs, accesses=accesses, frees=frees)
 
 

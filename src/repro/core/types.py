@@ -124,6 +124,7 @@ class PromoteFail(enum.IntEnum):
     NOT_ACTIVE = 2  # filtered by the active-LRU hysteresis
     BUDGET = 3  # per-step promotion budget exhausted
     PINNED = 4  # unevictable page
+    QOS = 5  # denied by the multi-tenant arbiter (quota / token bucket)
 
 
 class DemoteFail(enum.IntEnum):

@@ -40,6 +40,8 @@ class VmStat:
     pgpromote_fail_not_active: int = 0  # filtered (hysteresis)
     pgpromote_fail_budget: int = 0
     pgpromote_fail_pinned: int = 0
+    # Denied by the multi-tenant QoS arbiter (quota cap / token bucket).
+    pgpromote_fail_qos: int = 0
     # Ping-pong detector: promotion candidates that carry PG_demoted (§5.5).
     pgpromote_candidate_demoted: int = 0
 
@@ -87,6 +89,8 @@ class VmStat:
             self.pgpromote_fail_budget += n
         elif reason == PromoteFail.PINNED:
             self.pgpromote_fail_pinned += n
+        elif reason == PromoteFail.QOS:
+            self.pgpromote_fail_qos += n
 
     # -- derived metrics ----------------------------------------------------
     @property

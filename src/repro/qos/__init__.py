@@ -1,0 +1,49 @@
+"""Multi-tenant QoS: fair tiering arbitration over the placement engines.
+
+TPP (§6) is tenant-blind — on a shared host every tenant competes for
+the same fast-tier headroom, so a churny low-value job can evict a
+latency-critical service's hot pages.  This package adds the missing
+control layer (Equilibria-style fair multi-tenant tiering):
+
+* :class:`~repro.qos.accounting.TenantAccounting` — vectorized
+  per-tenant residency/hotness/migration accounting, maintained as
+  arrays alongside either page pool (the NeoMem-style cheap telemetry).
+* :class:`~repro.qos.quota.QosConfig` — per-tenant fast-tier quotas:
+  static shares or a dynamic mode that re-divides headroom each interval
+  from measured hotness, weighted by priority class
+  (``latency_critical > standard > batch``).
+* :class:`~repro.qos.arbiter.QosArbiter` — hooks the demotion
+  victim-selection and promotion-admission paths of **both**
+  ``PagePool`` and ``VectorPagePool`` (over-quota tenants demote first;
+  promotions are rate-limited per tenant by a token bucket), with
+  bit-identical semantics across engines (tests/test_qos.py).
+
+The hook surface is the pools' ``pool.qos`` attribute: ``None`` (today's
+tenant-blind behaviour, bit-identical to pre-QoS output), a bare
+``TenantAccounting`` (telemetry only, placement unchanged), or a
+``QosArbiter`` (telemetry + arbitration).
+"""
+
+from repro.qos.accounting import TenantAccounting
+from repro.qos.arbiter import QosArbiter
+from repro.qos.quota import (
+    DEFAULT_PRIORITY,
+    QOS_CLASSES,
+    QosConfig,
+    class_weights,
+    dynamic_quotas,
+    static_quotas,
+    token_refill,
+)
+
+__all__ = [
+    "DEFAULT_PRIORITY",
+    "QOS_CLASSES",
+    "QosArbiter",
+    "QosConfig",
+    "TenantAccounting",
+    "class_weights",
+    "dynamic_quotas",
+    "static_quotas",
+    "token_refill",
+]

@@ -1,0 +1,245 @@
+"""Vectorized per-tenant residency / hotness / migration accounting.
+
+:class:`TenantAccounting` is the telemetry half of the QoS subsystem: a
+struct-of-arrays ledger indexed by tenant id, maintained alongside
+either page pool via the ``pool.qos`` hook surface (DESIGN.md §7).  It
+tracks, per tenant:
+
+* **residency** — live fast-tier / slow-tier page counts (updated on
+  register/free/demote/promote, so reads are O(1) with no pool scan);
+* **hotness** — an EWMA of per-interval access counts (the cheap
+  NeoMem-style estimate the dynamic quota mode divides headroom by);
+* **migrations** — promote/demote counts, both cumulative (for the
+  ``SimResult.per_tenant`` attribution) and per-interval.
+
+Tenant attribution is a pid-indexed array (``-1`` = untracked); pids are
+monotonically increasing in both pools, so a freed pid is never reused
+and the slot is simply cleared.  All notes are either O(1) scalar
+updates (the reference pool's per-page paths) or one ``bincount`` (the
+vectorized pool's batch paths) — both produce identical counter states,
+which is what keeps the two engines bit-identical under QoS.
+
+The class also defines the *neutral* arbitration surface
+(:meth:`order_demotion_victims` returns candidates unchanged,
+:meth:`admit_promotion` always admits): attaching a bare
+``TenantAccounting`` adds telemetry without changing placement.
+:class:`~repro.qos.arbiter.QosArbiter` overrides both.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+_FAST = 0  # Tier.FAST — plain int for the scalar hot paths
+
+
+class TenantAccounting:
+    """Per-tenant SoA ledger + neutral arbitration hooks (``pool.qos``)."""
+
+    INITIAL_PID_CAPACITY = 1024
+
+    def __init__(self, n_tenants: int = 1, ewma_alpha: float = 0.3) -> None:
+        self.n_tenants = max(1, int(n_tenants))
+        self.ewma_alpha = float(ewma_alpha)
+        self._tenant_of_pid = np.full(self.INITIAL_PID_CAPACITY, -1, np.int64)
+        n = self.n_tenants
+        # residency (live pages per tier)
+        self.fast_pages = np.zeros(n, np.int64)
+        self.slow_pages = np.zeros(n, np.int64)
+        # migrations
+        self.promoted_total = np.zeros(n, np.int64)
+        self.demoted_total = np.zeros(n, np.int64)
+        self.promoted_interval = np.zeros(n, np.int64)
+        self.demoted_interval = np.zeros(n, np.int64)
+        # hotness
+        self.access_interval = np.zeros(n, np.int64)
+        self.hot_ewma = np.zeros(n, np.float64)
+        self.intervals = 0
+
+    # ---------------------------------------------------------------- #
+    # capacity
+    # ---------------------------------------------------------------- #
+    def _ensure_pid_capacity(self, max_pid: int) -> None:
+        cap = len(self._tenant_of_pid)
+        if max_pid < cap:
+            return
+        new_cap = max(max_pid + 1, 2 * cap)
+        grown = np.full(new_cap, -1, np.int64)
+        grown[:cap] = self._tenant_of_pid
+        self._tenant_of_pid = grown
+
+    def ensure_tenants(self, n: int) -> None:
+        """Grow every per-tenant array to hold at least ``n`` tenants."""
+        if n <= self.n_tenants:
+            return
+        pad = n - self.n_tenants
+        for name in ("fast_pages", "slow_pages", "promoted_total",
+                     "demoted_total", "promoted_interval", "demoted_interval",
+                     "access_interval"):
+            setattr(self, name, np.concatenate(
+                [getattr(self, name), np.zeros(pad, np.int64)]))
+        self.hot_ewma = np.concatenate(
+            [self.hot_ewma, np.zeros(pad, np.float64)])
+        self.n_tenants = n
+
+    # ---------------------------------------------------------------- #
+    # tenant attribution
+    # ---------------------------------------------------------------- #
+    def tenant_of_page(self, pid: int) -> int:
+        """Tenant id of a tracked page (−1 = untracked)."""
+        if 0 <= pid < len(self._tenant_of_pid):
+            return int(self._tenant_of_pid[pid])
+        return -1
+
+    def register_page(self, pid: int, tenant: int, tier: int) -> None:
+        """Scalar registration (the reference pool's allocation path)."""
+        self._ensure_pid_capacity(pid)
+        self._tenant_of_pid[pid] = tenant
+        if int(tier) == _FAST:
+            self.fast_pages[tenant] += 1
+        else:
+            self.slow_pages[tenant] += 1
+
+    def register_pages(
+        self,
+        pids: np.ndarray,
+        tenants: Union[int, np.ndarray],
+        tiers: np.ndarray,
+    ) -> None:
+        """Batch registration (the vectorized pool's allocation path).
+
+        ``tenants`` is a scalar tenant id or a per-pid array; ``tiers``
+        is the per-pid tier array ``try_allocate_many`` returned.
+        """
+        pids = np.asarray(pids, np.int64)
+        if pids.size == 0:
+            return
+        self._ensure_pid_capacity(int(pids.max()))
+        t = np.broadcast_to(np.asarray(tenants, np.int64), pids.shape)
+        self._tenant_of_pid[pids] = t
+        fast = np.asarray(tiers) == _FAST
+        if fast.any():
+            self.fast_pages += np.bincount(t[fast], minlength=self.n_tenants)
+        if not fast.all():
+            self.slow_pages += np.bincount(t[~fast], minlength=self.n_tenants)
+
+    # ---------------------------------------------------------------- #
+    # pool notes (hooked by both engines)
+    # ---------------------------------------------------------------- #
+    def note_free(self, pid: int, tier: int) -> None:
+        t = self.tenant_of_page(pid)
+        if t < 0:
+            return
+        self._tenant_of_pid[pid] = -1
+        if int(tier) == _FAST:
+            self.fast_pages[t] -= 1
+        else:
+            self.slow_pages[t] -= 1
+
+    def note_demote(self, pid: int) -> None:
+        t = self.tenant_of_page(pid)
+        if t < 0:
+            return
+        self.fast_pages[t] -= 1
+        self.slow_pages[t] += 1
+        self.demoted_total[t] += 1
+        self.demoted_interval[t] += 1
+
+    def note_promote(self, pid: int) -> None:
+        t = self.tenant_of_page(pid)
+        if t < 0:
+            return
+        self.slow_pages[t] -= 1
+        self.fast_pages[t] += 1
+        self.promoted_total[t] += 1
+        self.promoted_interval[t] += 1
+
+    def note_demote_many(self, pids: np.ndarray) -> None:
+        """Batched :meth:`note_demote` (the vectorized demotion batch)."""
+        pids = np.asarray(pids, np.int64)
+        if pids.size == 0:
+            return
+        in_range = pids < len(self._tenant_of_pid)
+        t = self._tenant_of_pid[pids[in_range]]
+        t = t[t >= 0]
+        if t.size == 0:
+            return
+        counts = np.bincount(t, minlength=self.n_tenants)
+        self.fast_pages -= counts
+        self.slow_pages += counts
+        self.demoted_total += counts
+        self.demoted_interval += counts
+
+    # ---------------------------------------------------------------- #
+    # hotness telemetry
+    # ---------------------------------------------------------------- #
+    def note_access_counts(self, counts: np.ndarray) -> None:
+        """Fold one step's per-tenant access counts into the interval."""
+        self.access_interval += counts
+
+    def observe_hits(self, pids: np.ndarray) -> None:
+        """Attribute a batch of touched pids to tenants (serving path)."""
+        pids = np.asarray(pids, np.int64)
+        if pids.size == 0:
+            return
+        pids = pids[pids < len(self._tenant_of_pid)]
+        t = self._tenant_of_pid[pids]
+        t = t[t >= 0]
+        if t.size:
+            self.access_interval += np.bincount(t, minlength=self.n_tenants)
+
+    def end_interval(self) -> None:
+        """Close an interval: fold access counts into the hotness EWMA."""
+        a = self.ewma_alpha
+        self.hot_ewma = (1.0 - a) * self.hot_ewma + a * self.access_interval
+        self.access_interval[:] = 0
+        self.promoted_interval[:] = 0
+        self.demoted_interval[:] = 0
+        self.intervals += 1
+
+    # ---------------------------------------------------------------- #
+    # neutral arbitration surface (QosArbiter overrides)
+    # ---------------------------------------------------------------- #
+    def order_demotion_victims(self, pids: List[int]) -> List[int]:
+        """Telemetry-only accounting never reorders victims."""
+        return pids
+
+    def admit_promotion(self, pid: int) -> bool:
+        """Telemetry-only accounting never denies a promotion."""
+        return True
+
+    def refund_promotion(self, pid: int) -> None:
+        """Undo an admission whose migration then failed (no-op here)."""
+
+    def qos_summary(self) -> Optional[Dict]:
+        """Arbitration summary — ``None`` for telemetry-only accounting."""
+        return None
+
+    # ---------------------------------------------------------------- #
+    # introspection
+    # ---------------------------------------------------------------- #
+    def residency(self) -> Dict[int, Dict[str, int]]:
+        return {
+            t: {"fast": int(self.fast_pages[t]), "slow": int(self.slow_pages[t])}
+            for t in range(self.n_tenants)
+        }
+
+    def check_consistency(self, pool) -> None:
+        """Assert the ledger matches the pool's live page table (tests)."""
+        from repro.core.types import Tier  # local: keep import surface tiny
+
+        fast = np.zeros(self.n_tenants, np.int64)
+        slow = np.zeros(self.n_tenants, np.int64)
+        for tier, acc in ((Tier.FAST, fast), (Tier.SLOW, slow)):
+            for pid in pool.pages_in_tier(tier):
+                t = self.tenant_of_page(pid)
+                if t >= 0:
+                    acc[t] += 1
+        assert np.array_equal(fast, self.fast_pages), (
+            f"fast residency drift: ledger {self.fast_pages} vs pool {fast}"
+        )
+        assert np.array_equal(slow, self.slow_pages), (
+            f"slow residency drift: ledger {self.slow_pages} vs pool {slow}"
+        )

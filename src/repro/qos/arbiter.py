@@ -1,0 +1,179 @@
+"""The QoS arbiter: tenant-aware tiering arbitration for both engines.
+
+:class:`QosArbiter` extends the telemetry ledger
+(:class:`~repro.qos.accounting.TenantAccounting`) with the two
+arbitration hooks both page pools consult when ``pool.qos`` is set:
+
+* **demotion victim ordering** — reclaim candidates from over-quota
+  tenants demote first (a stable partition of the pool's candidate
+  list, so the LRU/frequency order within each group is preserved and
+  both engines see the same sequence);
+* **promotion admission** — a promotion is admitted only while the
+  tenant is under its fast-tier quota (+ slack) *and* its token bucket
+  has a token (refilled per interval proportionally to priority
+  weight).  Denied promotions count as ``pgpromote_fail_qos`` /
+  ``PromoteFail.QOS`` — a latency-critical stream can never be starved
+  of migration bandwidth by a churny batch neighbor.
+
+Every decision is a pure function of counters that are bit-identical
+across the reference and vectorized engines, so placement under QoS is
+too (tests/test_qos.py enforces it); with ``pool.qos = None`` both
+engines are bit-identical to the pre-QoS output.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.qos.accounting import TenantAccounting
+from repro.qos.quota import (
+    QosConfig,
+    class_weights,
+    dynamic_quotas,
+    static_quotas,
+    token_refill,
+)
+
+
+class QosArbiter(TenantAccounting):
+    """Quota + token-bucket arbitration over the tenant ledger."""
+
+    def __init__(
+        self,
+        n_tenants: int,
+        fast_frames: int,
+        config: Optional[QosConfig] = None,
+        classes: Optional[Sequence[str]] = None,
+    ) -> None:
+        self.config = config or QosConfig()
+        super().__init__(n_tenants, ewma_alpha=self.config.ewma_alpha)
+        self.fast_frames = int(fast_frames)
+        cls = list(classes if classes is not None else self.config.classes)
+        cls += ["standard"] * (self.n_tenants - len(cls))
+        self.classes: List[str] = cls[: self.n_tenants]
+        self._rebuild_shares()
+        # buckets start full so a fresh tenant can promote immediately
+        self.tokens = self._burst.copy()
+        # arbitration observability
+        self.denied_quota = np.zeros(self.n_tenants, np.int64)
+        self.denied_token = np.zeros(self.n_tenants, np.int64)
+        self.violations_by_tenant = np.zeros(self.n_tenants, np.int64)
+        self.quota_violation_intervals = 0
+
+    # ---------------------------------------------------------------- #
+    # shares / growth
+    # ---------------------------------------------------------------- #
+    def _rebuild_shares(self) -> None:
+        self.weights = class_weights(self.config, self.classes)
+        self.quota = static_quotas(self.config, self.weights, self.fast_frames)
+        if self.config.mode == "dynamic" and self.intervals > 0:
+            self.quota = dynamic_quotas(
+                self.config, self.weights, self.hot_ewma, self.fast_frames
+            )
+        self._refill = token_refill(self.config, self.weights)
+        self._burst = self.config.token_burst * np.maximum(self._refill, 1.0)
+
+    def ensure_tenants(self, n: int) -> None:
+        if n <= self.n_tenants:
+            return
+        pad = n - self.n_tenants
+        super().ensure_tenants(n)
+        self.classes += ["standard"] * pad
+        for name in ("denied_quota", "denied_token", "violations_by_tenant"):
+            setattr(self, name, np.concatenate(
+                [getattr(self, name), np.zeros(pad, np.int64)]))
+        old_tokens = self.tokens
+        self._rebuild_shares()
+        self.tokens = np.concatenate([old_tokens, self._burst[-pad:]])
+
+    def configure_tenant(self, tenant: int, qos_class: str) -> None:
+        """Assign (or reassign) a tenant's priority class."""
+        if qos_class not in self.config.priority:
+            raise ValueError(
+                f"unknown qos class {qos_class!r}; choose from "
+                f"{sorted(self.config.priority)}"
+            )
+        self.ensure_tenants(tenant + 1)
+        if self.classes[tenant] != qos_class:
+            self.classes[tenant] = qos_class
+            self._rebuild_shares()
+            self.tokens = np.minimum(self.tokens, self._burst)
+
+    # ---------------------------------------------------------------- #
+    # arbitration hooks (consulted by both pools)
+    # ---------------------------------------------------------------- #
+    def order_demotion_victims(self, pids: List[int]) -> List[int]:
+        """Stable partition: pages of over-quota tenants demote first."""
+        if len(pids) < 2:
+            return pids
+        arr = np.asarray(pids, np.int64)
+        in_range = arr < len(self._tenant_of_pid)
+        t = np.where(in_range, self._tenant_of_pid[np.minimum(
+            arr, len(self._tenant_of_pid) - 1)], -1)
+        over = np.zeros(len(arr), bool)
+        known = t >= 0
+        if known.any():
+            slack = self.config.quota_slack
+            tk = t[known]
+            over[known] = self.fast_pages[tk] > self.quota[tk] + slack
+        if not over.any() or over.all():
+            return pids
+        return [p for p, o in zip(pids, over) if o] + \
+               [p for p, o in zip(pids, over) if not o]
+
+    def admit_promotion(self, pid: int) -> bool:
+        """Quota + token-bucket gate on the promotion path."""
+        t = self.tenant_of_page(pid)
+        if t < 0:
+            return True  # untracked pages are outside arbitration
+        if self.fast_pages[t] >= self.quota[t] + self.config.quota_slack:
+            self.denied_quota[t] += 1
+            return False
+        if self.tokens[t] < 1.0:
+            self.denied_token[t] += 1
+            return False
+        self.tokens[t] -= 1.0
+        return True
+
+    def refund_promotion(self, pid: int) -> None:
+        """Return the token of an admitted promotion whose migration
+        failed (e.g. no free fast frame) — pressure on the fast tier
+        must not drain a well-behaved tenant's bucket."""
+        t = self.tenant_of_page(pid)
+        if t >= 0:
+            self.tokens[t] = min(self.tokens[t] + 1.0, self._burst[t])
+
+    # ---------------------------------------------------------------- #
+    # interval close: violations, dynamic re-division, token refill
+    # ---------------------------------------------------------------- #
+    def end_interval(self) -> None:
+        over = self.fast_pages > self.quota + self.config.quota_slack
+        if over.any():
+            self.quota_violation_intervals += 1
+            self.violations_by_tenant += over
+        super().end_interval()  # folds access counts into the EWMA
+        if self.config.mode == "dynamic":
+            self.quota = dynamic_quotas(
+                self.config, self.weights, self.hot_ewma, self.fast_frames
+            )
+        self.tokens = np.minimum(self.tokens + self._refill, self._burst)
+
+    # ---------------------------------------------------------------- #
+    # observability
+    # ---------------------------------------------------------------- #
+    def qos_summary(self) -> Optional[Dict]:
+        return {
+            "mode": self.config.mode,
+            "classes": list(self.classes),
+            "quota": [round(float(q), 2) for q in self.quota],
+            "fast_pages": [int(x) for x in self.fast_pages],
+            "slow_pages": [int(x) for x in self.slow_pages],
+            "promoted": [int(x) for x in self.promoted_total],
+            "demoted": [int(x) for x in self.demoted_total],
+            "denied_quota": [int(x) for x in self.denied_quota],
+            "denied_token": [int(x) for x in self.denied_token],
+            "quota_violation_intervals": int(self.quota_violation_intervals),
+            "violations_by_tenant": [int(x) for x in self.violations_by_tenant],
+        }

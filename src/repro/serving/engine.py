@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import PageType, Tier, TppConfig, make_policy
 from repro.kernels import ops as kernel_ops
+from repro.qos import QosArbiter, QosConfig
 from repro.kernels.paged_attention import PAD_PAGE_POS
 from repro.models import nn
 from repro.models.attention import AttnConfig, make_cos_sin, _rotate
@@ -71,6 +72,11 @@ class EngineConfig:
     tpp: TppConfig = dataclasses.field(default_factory=TppConfig)
     max_seqs: int = 8
     data_plane: str = "reference"  # "reference" | "batched"
+    # Multi-tenant QoS (repro.qos): a QosConfig arms the arbiter on the
+    # KV pool; requests are tagged with a tenant id + priority class
+    # (``add_request``), defaulting to ``qos_class``.
+    qos: Optional[QosConfig] = None
+    qos_class: str = "standard"
 
 
 @dataclasses.dataclass
@@ -85,8 +91,9 @@ class Request:
 class _Seq:
     """Engine-side sequence state."""
 
-    def __init__(self, rid: int) -> None:
+    def __init__(self, rid: int, tenant: int = 0) -> None:
         self.rid = rid
+        self.tenant = tenant  # QoS tenant id (frame tagging)
         self.pages: List[int] = []  # pids, in order
         self.cur_len = 0
         self.paused = False
@@ -152,6 +159,12 @@ class ServingEngine:
             ),
             tpp=engine.tpp,
         )
+        self.qos: Optional[QosArbiter] = None
+        if engine.qos is not None:
+            self.qos = QosArbiter(
+                n_tenants=1, fast_frames=engine.num_fast, config=engine.qos
+            )
+            self.kv.pool.qos = self.qos
         self.policy = make_policy(engine.policy, self.kv.pool, seed=seed)
         self.seqs: Dict[int, _Seq] = {}
         self.requests: Dict[int, Request] = {}
@@ -187,17 +200,34 @@ class ServingEngine:
     # ---------------------------------------------------------------- #
     # request lifecycle
     # ---------------------------------------------------------------- #
-    def add_request(self, prompt: Sequence[int], max_new: int = 16) -> int:
+    def add_request(
+        self,
+        prompt: Sequence[int],
+        max_new: int = 16,
+        qos_class: Optional[str] = None,
+        tenant: int = 0,
+    ) -> int:
+        """Admit a request; ``tenant``/``qos_class`` feed the QoS arbiter.
+
+        ``tenant`` groups requests into one accounting/quota bucket (a
+        stream of batch jobs can share one tenant id); ``qos_class``
+        sets that tenant's priority class (default
+        ``EngineConfig.qos_class``).  Ignored when QoS is off.
+        """
         if len(self.seqs) >= self.ecfg.max_seqs:
             raise AdmissionError(
                 f"engine at max_seqs={self.ecfg.max_seqs}; finish() a "
                 "sequence before admitting another"
             )
+        if self.qos is not None:
+            # validate/assign the class before any engine state mutates,
+            # so a bad qos_class can't leave a zombie sequence behind
+            self.qos.configure_tenant(tenant, qos_class or self.ecfg.qos_class)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
         self.requests[rid] = req
-        self.seqs[rid] = _Seq(rid)
+        self.seqs[rid] = _Seq(rid, tenant=tenant)
         if self.ecfg.data_plane == "batched":
             self._slot_of[rid] = self._free_slots.pop()
         self._prefill(req)
@@ -243,7 +273,9 @@ class ServingEngine:
             if seq.pages:
                 # the sealed tail page becomes long-lived prefix bulk
                 self.kv.retype(seq.pages[-1], PageType.FILE)
-            seq.pages.append(self.kv.alloc_page(PageType.ANON))
+            seq.pages.append(
+                self.kv.alloc_page(PageType.ANON, tenant=seq.tenant)
+            )
         return seq.pages[-1], slot
 
     def _prefill_forward(self, req: Request) -> Tuple[jax.Array, jax.Array]:
@@ -394,12 +426,18 @@ class ServingEngine:
             req.out.append(tok)
             if len(req.out) >= req.max_new:
                 req.done = True
+        if self.qos is not None:
+            # per-tenant hotness telemetry for the dynamic quota mode
+            hits = slow_hits + fast_hits
+            self.qos.observe_hits(np.fromiter(hits, np.int64, count=len(hits)))
         # Uniform PlacementPolicy protocol: every policy receives both hit
         # streams (NUMA balancing samples fast hits; the rest ignore them).
         self.policy.step(slow_hits, fast_hits)
         self.steps += 1
         if self.steps % 4 == 0:
             self.kv.pool.end_interval()
+            if self.qos is not None:
+                self.qos.end_interval()
         return out
 
     # ------------------------- reference plane ---------------------- #
@@ -689,7 +727,7 @@ class ServingEngine:
     # ---------------------------------------------------------------- #
     def stats(self) -> Dict[str, Any]:
         vs = self.kv.pool.vmstat
-        return {
+        out = {
             "steps": self.steps,
             "local_fraction": vs.local_access_fraction,
             "demoted": vs.pgdemote_total,
@@ -698,3 +736,6 @@ class ServingEngine:
             "fast_free": self.kv.pool.free_frames(Tier.FAST),
             "slow_used": self.kv.pool.used_frames(Tier.SLOW),
         }
+        if self.qos is not None:
+            out["qos"] = self.qos.qos_summary()
+        return out

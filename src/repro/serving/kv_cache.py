@@ -260,8 +260,15 @@ class TieredKVCache:
     # ---------------------------------------------------------------- #
     # allocation API (used by the engine)
     # ---------------------------------------------------------------- #
-    def alloc_page(self, page_type: PageType = PageType.ANON) -> int:
+    def alloc_page(
+        self, page_type: PageType = PageType.ANON,
+        tenant: Optional[int] = None,
+    ) -> int:
+        """Allocate a KV page; ``tenant`` tags the frame for the QoS
+        arbiter (per-tenant residency/hotness attribution)."""
         page = self.pool.allocate(page_type)
+        if tenant is not None and self.pool.qos is not None:
+            self.pool.qos.register_page(page.pid, tenant, int(page.tier))
         # The claimed frame may still source a staged copy (it was freed
         # by a not-yet-flushed demotion): settle before anyone writes it.
         self._flush_if_touches(self._global(page.tier, page.frame))

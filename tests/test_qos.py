@@ -1,0 +1,423 @@
+"""Multi-tenant QoS subsystem tests (repro.qos).
+
+Covers the acceptance surface of the QoS control plane:
+
+* **engine parity** — reference and vectorized engines produce
+  bit-identical placement and per-tenant counters on the ``web+cache1``
+  and ``web+cache1+data_warehouse`` mixes, with and without the QoS
+  arbiter; telemetry-only accounting (QoS off) is placement-neutral,
+  i.e. bit-identical to a fully detached pool.
+* **per-tenant attribution** — promote/demote (and access/alloc)
+  counters sum to the global ``VmStat``.
+* **arbitration mechanics** — quota caps and token buckets deny
+  promotions (``pgpromote_fail_qos``), over-quota tenants demote first,
+  the residency ledger matches the pool, dynamic quotas track hotness.
+* **fairness metrics** — per-tenant modeled slowdown and Jain's index.
+* **serving integration** — per-request tenant/class tagging, arbiter
+  consulted by the KV pool, data-plane parity under QoS, and the
+  noisy-neighbor protection effect end to end.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PagePool,
+    PageType,
+    TieredSimulator,
+    Tier,
+    TppConfig,
+    VectorPagePool,
+    make_trace,
+)
+from repro.qos import QosArbiter, QosConfig, TenantAccounting
+
+MIXES = ("web+cache1", "web+cache1+data_warehouse")
+QOS3 = QosConfig(mode="dynamic",
+                 classes=("latency_critical", "standard", "batch"))
+
+
+def run_sim(workload, engine, qos=None, policy="tpp", fast=300, slow=1200,
+            steps=40, total=800, seed=7, detach_qos=False):
+    sim = TieredSimulator(
+        workload, policy, fast, slow, seed=seed,
+        trace=make_trace(workload, seed=seed, total_pages=total),
+        engine=engine, qos=qos,
+    )
+    if detach_qos:
+        sim.pool.qos = None
+    return sim.run(steps, measure_from=10)
+
+
+def assert_parity(ref, vec):
+    assert ref.vmstat.as_dict() == vec.vmstat.as_dict()
+    assert ref.summary() == vec.summary()
+    assert ref.per_tenant == vec.per_tenant
+    assert ref.local_fraction == vec.local_fraction
+    assert ref.qos == vec.qos
+
+
+# --------------------------------------------------------------------- #
+# engine parity (the acceptance criterion)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("mix", MIXES)
+def test_parity_with_qos_enabled(mix):
+    ref = run_sim(mix, "reference", qos=QOS3)
+    vec = run_sim(mix, "vectorized", qos=QOS3)
+    assert_parity(ref, vec)
+    assert ref.qos is not None and ref.qos["mode"] == "dynamic"
+
+
+@pytest.mark.parametrize("mix", MIXES)
+def test_parity_with_qos_disabled(mix):
+    ref = run_sim(mix, "reference")
+    vec = run_sim(mix, "vectorized")
+    assert_parity(ref, vec)
+    assert ref.qos is None  # telemetry-only accounting, no arbitration
+
+
+@pytest.mark.parametrize("policy", ("numa_balancing", "autotiering"))
+def test_parity_with_qos_other_policies(policy):
+    """The arbiter hooks the pool, so every policy is covered."""
+    ref = run_sim("web+cache1", "reference", qos=QOS3, policy=policy)
+    vec = run_sim("web+cache1", "vectorized", qos=QOS3, policy=policy)
+    assert_parity(ref, vec)
+
+
+@pytest.mark.parametrize("engine", ("reference", "vectorized"))
+def test_qos_off_is_bit_identical_to_detached_pool(engine):
+    """Telemetry-only accounting never changes placement decisions."""
+    with_acc = run_sim("web+cache1", engine)
+    without = run_sim("web+cache1", engine, detach_qos=True)
+    assert with_acc.vmstat.as_dict() == without.vmstat.as_dict()
+    assert with_acc.local_fraction == without.local_fraction
+    assert with_acc.promote_rate == without.promote_rate
+    assert with_acc.demote_rate == without.demote_rate
+
+
+# --------------------------------------------------------------------- #
+# per-tenant attribution (satellite: counters sum to the global VmStat)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("qos", (None, QOS3))
+def test_per_tenant_counters_sum_to_vmstat(qos):
+    for engine in ("reference", "vectorized"):
+        r = run_sim("web+cache1+data_warehouse", engine, qos=qos)
+        vs = r.vmstat
+        assert r.per_tenant is not None
+        sums = {
+            k: sum(acc[k] for acc in r.per_tenant.values())
+            for k in ("promoted", "demoted", "access_fast", "access_slow",
+                      "allocated")
+        }
+        assert sums["promoted"] == vs.pgpromote_total
+        assert sums["demoted"] == vs.pgdemote_total
+        assert sums["access_fast"] == vs.access_fast
+        assert sums["access_slow"] == vs.access_slow
+        assert sums["allocated"] == vs.pgalloc_fast + vs.pgalloc_slow
+        assert vs.pgdemote_total > 0  # the attribution was exercised
+
+
+def test_accounting_residency_matches_pool():
+    for engine in ("reference", "vectorized"):
+        sim = TieredSimulator(
+            "web+cache1", "tpp", 300, 1200, seed=7,
+            trace=make_trace("web+cache1", seed=7, total_pages=800),
+            engine=engine, qos=QOS3,
+        )
+        sim.run(30)
+        sim.pool.qos.check_consistency(sim.pool)
+
+
+# --------------------------------------------------------------------- #
+# arbitration mechanics (pool-level units)
+# --------------------------------------------------------------------- #
+def _pool_with_arbiter(pool_cls, config):
+    pool = pool_cls(64, 64)
+    arb = QosArbiter(2, fast_frames=64, config=config)
+    pool.qos = arb
+    return pool, arb
+
+
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_quota_cap_denies_promotion(pool_cls):
+    cfg = QosConfig(mode="static", shares=(0.5, 0.5),
+                    promote_tokens_per_interval=1000.0)
+    pool, arb = _pool_with_arbiter(pool_cls, cfg)
+    # tenant 0 far over its 32-frame quota; tenant 1 well under
+    pids0 = [pool.allocate(PageType.ANON).pid for _ in range(40)]
+    arb.register_pages(np.asarray(pids0), 0, np.zeros(40, np.int8))
+    p_slow = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+    arb.register_page(p_slow.pid, 0, int(Tier.SLOW))
+    res = pool.promote_page(p_slow.pid)
+    assert res.name == "QOS"
+    assert pool.vmstat.pgpromote_fail_qos == 1
+    assert arb.denied_quota[0] == 1
+    # an under-quota tenant promotes fine
+    p1 = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+    arb.register_page(p1.pid, 1, int(Tier.SLOW))
+    assert pool.promote_page(p1.pid).name == "NONE"
+    assert arb.promoted_total[1] == 1
+
+
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_token_bucket_rate_limits_promotions(pool_cls):
+    cfg = QosConfig(mode="static", promote_tokens_per_interval=2.0,
+                    token_burst=1.0)
+    pool, arb = _pool_with_arbiter(pool_cls, cfg)
+    # equal weights -> 1 token per tenant per interval, burst = refill
+    pids = []
+    for _ in range(4):
+        p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+        arb.register_page(p.pid, 0, int(Tier.SLOW))
+        pids.append(p.pid)
+    results = [pool.promote_page(pid).name for pid in pids]
+    assert results.count("NONE") == 1 and results.count("QOS") == 3
+    assert arb.denied_token[0] == 3
+    arb.end_interval()  # refill
+    p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+    arb.register_page(p.pid, 0, int(Tier.SLOW))
+    assert pool.promote_page(p.pid).name == "NONE"
+
+
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_token_refunded_when_migration_fails(pool_cls):
+    """An admitted promotion that finds no free fast frame must not
+    drain the tenant's bucket — pressure is not the tenant's fault."""
+    cfg = QosConfig(mode="static", promote_tokens_per_interval=2.0,
+                    token_burst=1.0)
+    pool = pool_cls(4, 8)
+    arb = QosArbiter(1, fast_frames=4, config=cfg)
+    pool.qos = arb
+    # allocation stops at wm_min; promotions ignore it, so drain the
+    # remaining fast frames with promotions to reach zero free
+    while pool.free_frames(Tier.FAST) > pool.wm_min:
+        pool.allocate(PageType.ANON, prefer=Tier.FAST)
+    while pool.free_frames(Tier.FAST) > 0:
+        p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+        arb.register_page(p.pid, 0, int(Tier.SLOW))
+        assert pool.promote_page(p.pid).name == "NONE"
+    p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
+    arb.register_page(p.pid, 0, int(Tier.SLOW))
+    tokens_before = float(arb.tokens[0])
+    assert tokens_before >= 1.0  # the failed attempt is not token-starved
+    assert pool.promote_page(p.pid).name == "TARGET_LOW_MEM"
+    assert float(arb.tokens[0]) == tokens_before  # consumed then refunded
+    assert arb.denied_token[0] == 0
+
+
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_over_quota_tenants_demote_first(pool_cls):
+    cfg = QosConfig(mode="static", shares=(0.5, 0.5))
+    pool, arb = _pool_with_arbiter(pool_cls, cfg)
+    # interleave: tenant 1 owns the odd allocation ranks and is pushed
+    # over quota; tenant 0 stays under
+    for i in range(40):
+        p = pool.allocate(PageType.ANON)
+        arb.register_page(p.pid, i % 2, int(p.tier))
+    arb.fast_pages[1] = 40  # force tenant 1 over its 32-frame quota
+    victims = pool.demotion_victims(10)
+    tenants = [arb.tenant_of_page(pid) for pid in victims]
+    first_under = tenants.index(0)
+    assert all(t == 1 for t in tenants[:first_under])
+    assert all(t == 0 for t in tenants[first_under:])
+    # stable within each group: pids ascending (allocation order)
+    ones = [v for v, t in zip(victims, tenants) if t == 1]
+    zeros = [v for v, t in zip(victims, tenants) if t == 0]
+    assert ones == sorted(ones) and zeros == sorted(zeros)
+
+
+def test_dynamic_quotas_track_hotness_and_priority():
+    cfg = QosConfig(mode="dynamic",
+                    classes=("latency_critical", "batch"), min_share=0.05)
+    arb = QosArbiter(2, fast_frames=100, config=cfg)
+    # equal measured hotness -> quotas split by priority weight (4:1)
+    arb.note_access_counts(np.asarray([100, 100]))
+    arb.end_interval()
+    assert arb.quota[0] == pytest.approx(80.0)
+    assert arb.quota[1] == pytest.approx(20.0)
+    # hotness flips 1:9 -> batch demand grows, LC keeps its weight edge
+    for _ in range(20):
+        arb.note_access_counts(np.asarray([10, 90]))
+        arb.end_interval()
+    assert arb.quota[1] > 20.0
+    assert arb.quota[0] > arb.quota[1] * 0.3  # floor + weight hold
+    assert arb.quota[0] >= cfg.min_share * 100
+
+
+def test_quota_violation_intervals_counted():
+    arb = QosArbiter(2, fast_frames=10,
+                     config=QosConfig(mode="static", shares=(0.5, 0.5)))
+    arb.fast_pages[:] = (9, 1)  # tenant 0 over its 5-frame quota
+    arb.end_interval()
+    arb.end_interval()
+    assert arb.quota_violation_intervals == 2
+    assert list(arb.violations_by_tenant) == [2, 0]
+
+
+def test_accounting_is_growable_and_ignores_untracked():
+    acc = TenantAccounting(1)
+    acc.register_page(5, 0, 0)
+    acc.ensure_tenants(3)
+    acc.register_page(6, 2, 1)
+    acc.note_demote(5)
+    acc.note_free(6, 1)
+    acc.note_free(999_999, 0)  # untracked + out of range: no-op
+    assert list(acc.fast_pages) == [0, 0, 0]
+    assert list(acc.slow_pages) == [1, 0, 0]
+    assert list(acc.demoted_total) == [1, 0, 0]
+    assert acc.admit_promotion(12345)  # neutral surface admits anything
+    assert acc.order_demotion_victims([3, 1, 2]) == [3, 1, 2]
+
+
+def test_qos_config_validation():
+    with pytest.raises(ValueError):
+        QosConfig(mode="nonsense")
+    with pytest.raises(ValueError):
+        QosConfig(classes=("gold",))
+    arb = QosArbiter(1, fast_frames=8, config=QosConfig())
+    with pytest.raises(ValueError):
+        arb.configure_tenant(0, "platinum")
+
+
+# --------------------------------------------------------------------- #
+# fairness metrics
+# --------------------------------------------------------------------- #
+def test_fairness_metrics():
+    r = run_sim("web+cache1+data_warehouse", "vectorized", qos=QOS3)
+    slow = r.tenant_slowdowns()
+    assert set(slow) == {0, 1, 2}
+    assert all(v >= 1.0 for v in slow.values())
+    jain = r.jains_fairness()
+    assert 1.0 / 3 <= jain <= 1.0
+    fs = r.fairness_summary()
+    assert fs["jains_index"] == jain
+    assert fs["quota_violation_intervals"] is not None
+
+
+def test_jain_index_is_one_for_equal_slowdowns():
+    from repro.core import SimResult, VmStat
+
+    r = SimResult(
+        policy="tpp", workload="x", steps=1, total_accesses=2,
+        modeled_time=2.0, ideal_time=2.0, vmstat=VmStat(),
+        local_fraction=[], promote_rate=[], demote_rate=[],
+        alloc_fast_rate=[],
+        per_tenant={0: {"access_fast": 10, "access_slow": 0, "refaults": 0},
+                    1: {"access_fast": 10, "access_slow": 0, "refaults": 0}},
+    )
+    assert r.tenant_slowdowns() == {0: 1.0, 1: 1.0}
+    assert r.jains_fairness() == 1.0
+
+
+# --------------------------------------------------------------------- #
+# the point of the subsystem: noisy-neighbor protection
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_qos_improves_latency_critical_slowdown():
+    """On the contended 3-tenant mix, the latency-critical tenant's
+    modeled slowdown improves under tpp+qos vs tenant-blind tpp."""
+    cfg = TppConfig(demote_budget=512, promote_budget=256, sample_rate=0.1)
+    qos = QosConfig(mode="dynamic",
+                    classes=("latency_critical", "standard", "batch"),
+                    promote_tokens_per_interval=128.0)
+
+    def run(q):
+        sim = TieredSimulator(
+            "web+cache1+data_warehouse", "tpp", 512, 2400, config=cfg,
+            slow_cost=3.0, seed=1,
+            trace=make_trace("web+cache1+data_warehouse", seed=1,
+                             total_pages=1950),
+            engine="vectorized", qos=q,
+        )
+        return sim.run(160, measure_from=100)
+
+    base = run(None)
+    qres = run(qos)
+    assert qres.tenant_slowdowns()[0] < base.tenant_slowdowns()[0]
+    assert qres.jains_fairness() > base.jains_fairness()
+
+
+# --------------------------------------------------------------------- #
+# serving integration
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _serving_engine(tiny_model, plane, qos):
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg, params = tiny_model
+    return ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=16, num_slow=64, topk_pages=2, recent_pages=2,
+        max_seqs=4, data_plane=plane,
+        tpp=TppConfig(demote_budget=8, promote_budget=4),
+        qos=qos,
+    ), seed=0)
+
+
+def test_serving_tags_frames_by_tenant_and_class(tiny_model):
+    import numpy as np
+
+    qos = QosConfig(mode="static", promote_tokens_per_interval=16.0)
+    eng = _serving_engine(tiny_model, "reference", qos)
+    rng = np.random.default_rng(0)
+    rids = [
+        eng.add_request(list(rng.integers(0, tiny_model[0].vocab, 12)),
+                        max_new=8, qos_class=cls, tenant=t)
+        for t, cls in ((0, "latency_critical"), (1, "batch"))
+    ]
+    assert eng.qos.classes[:2] == ["latency_critical", "batch"]
+    for rid in rids:
+        seq = eng.seqs[rid]
+        for pid in seq.pages:
+            assert eng.qos.tenant_of_page(pid) == seq.tenant
+    for _ in range(8):
+        eng.step()
+    eng.qos.check_consistency(eng.kv.pool)
+    assert int(eng.qos.access_interval.sum() + eng.qos.hot_ewma.sum()) > 0
+    eng.finish(rids[0])  # frees flow back through the ledger
+    eng.qos.check_consistency(eng.kv.pool)
+    assert eng.stats()["qos"]["classes"][:2] == ["latency_critical", "batch"]
+
+
+def test_add_request_invalid_qos_class_leaves_no_state(tiny_model):
+    qos = QosConfig(mode="static")
+    eng = _serving_engine(tiny_model, "reference", qos)
+    with pytest.raises(ValueError):
+        eng.add_request([1, 2, 3], max_new=4, qos_class="gold", tenant=0)
+    assert not eng.seqs and not eng.requests  # no zombie sequence
+    rid = eng.add_request([1, 2, 3], max_new=2, qos_class="standard")
+    eng.step()  # the engine still runs normally afterwards
+    assert rid in eng.seqs
+
+
+@pytest.mark.slow
+def test_serving_plane_parity_under_qos(tiny_model):
+    import numpy as np
+
+    qos = QosConfig(mode="static", promote_tokens_per_interval=8.0)
+    toks = {}
+    for plane in ("reference", "batched"):
+        eng = _serving_engine(tiny_model, plane, qos)
+        rng = np.random.default_rng(0)
+        rids = [
+            eng.add_request(list(rng.integers(0, tiny_model[0].vocab, 12)),
+                            max_new=12,
+                            qos_class="latency_critical" if i == 0 else "batch",
+                            tenant=i)
+            for i in range(3)
+        ]
+        for _ in range(12):
+            eng.step()
+        toks[plane] = {rid: eng.requests[rid].out for rid in rids}
+        vm = eng.kv.pool.vmstat
+        assert vm.pgpromote_fail_qos >= 0  # counter exists on the path
+    assert toks["reference"] == toks["batched"]

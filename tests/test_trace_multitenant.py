@@ -1,0 +1,140 @@
+"""MultiTenantTrace coverage: determinism, encoding, exhaustion.
+
+The trace mixer underpins both the engine-parity suite and the QoS
+subsystem, so its contract is pinned here:
+
+* a fixed seed yields a deterministic interleaving (bit-identical
+  steps across constructions);
+* the collision-free index encoding round-trips (tenant and local
+  index are recoverable from any global index, scalar and vectorized);
+* a tenant whose underlying trace exhausts first (finite replays) stops
+  contributing events, and the mix ends only when all tenants have.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ReplayTrace,
+    TieredSimulator,
+    make_trace,
+    record_trace,
+)
+from repro.core.trace import WORKLOADS, MultiTenantTrace, TraceGenerator
+
+MIX = "web+cache1+data_warehouse"
+
+
+def _materialize(trace, steps):
+    return [next(trace) for _ in range(steps)]
+
+
+# --------------------------------------------------------------------- #
+# determinism
+# --------------------------------------------------------------------- #
+def test_deterministic_interleaving_under_fixed_seed():
+    a = _materialize(make_trace(MIX, seed=11, total_pages=600), 12)
+    b = _materialize(make_trace(MIX, seed=11, total_pages=600), 12)
+    for sa, sb in zip(a, b):
+        assert sa.allocs == sb.allocs
+        assert sa.accesses == sb.accesses
+        assert sa.frees == sb.frees
+
+
+def test_different_seeds_differ():
+    a = _materialize(make_trace(MIX, seed=1, total_pages=600), 6)
+    b = _materialize(make_trace(MIX, seed=2, total_pages=600), 6)
+    assert any(sa.accesses != sb.accesses for sa, sb in zip(a, b))
+
+
+# --------------------------------------------------------------------- #
+# tenant encoding round-trip
+# --------------------------------------------------------------------- #
+def test_tenant_encoding_round_trip():
+    mt = make_trace(MIX, seed=3, total_pages=600)
+    n = mt.n_tenants
+    assert n == 3
+    # explicit round-trip: local*n + t -> (t, local)
+    for local in (0, 1, 7, 1000):
+        for t in range(n):
+            g = mt._g(local, t)
+            assert mt.tenant_of(g) == t
+            assert g // n == local
+    # every index emitted by a real step attributes to a valid tenant,
+    # and the vectorized path agrees with the scalar one
+    step = next(mt)
+    gidx = np.asarray(step.accesses + [g for g, _ in step.allocs], np.int64)
+    vec = mt.tenant_of_array(gidx)
+    assert vec.min() >= 0 and vec.max() < n
+    assert [mt.tenant_of(int(g)) for g in gidx] == list(vec)
+
+
+def test_tenant_indices_never_collide():
+    mt = make_trace("web+cache1", seed=5, total_pages=400)
+    seen = {}
+    for step in _materialize(mt, 8):
+        for g, _ in step.allocs:
+            t = mt.tenant_of(g)
+            assert seen.setdefault(g, t) == t  # one tenant per index, ever
+
+
+# --------------------------------------------------------------------- #
+# exhaustion: one tenant's trace ends before the others
+# --------------------------------------------------------------------- #
+def _short_mix(short_steps, long_steps):
+    mt = MultiTenantTrace(
+        [WORKLOADS["web"], WORKLOADS["cache1"]], seed=9, total_pages_each=200
+    )
+    mt.tenants[0] = record_trace(
+        TraceGenerator(WORKLOADS["web"], seed=9, total_pages=200), short_steps
+    )
+    mt.tenants[1] = record_trace(
+        TraceGenerator(WORKLOADS["cache1"], seed=10, total_pages=200), long_steps
+    )
+    return mt
+
+
+def test_exhausted_tenant_stops_contributing():
+    mt = _short_mix(3, 8)
+    for i in range(8):
+        step = next(mt)
+        tenants = {mt.tenant_of(g) for g in step.accesses}
+        if i < 3:
+            assert tenants == {0, 1}
+        else:  # tenant 0 ran dry: only tenant 1 events remain
+            assert tenants == {1}
+    with pytest.raises(StopIteration):
+        next(mt)
+
+
+def test_mix_raises_only_when_all_tenants_exhausted():
+    mt = _short_mix(2, 5)
+    produced = 0
+    while True:
+        try:
+            next(mt)
+            produced += 1
+        except StopIteration:
+            break
+    assert produced == 5  # the longest tenant defines the mix length
+
+
+def test_simulator_handles_partial_tenant_exhaustion():
+    """The simulator keeps running on the surviving tenants' events."""
+    mt = _short_mix(3, 10)
+    sim = TieredSimulator("web+cache1", "tpp", 128, 512, seed=9, trace=mt)
+    res = sim.run(10)
+    assert res.per_tenant is not None
+    # both tenants saw traffic, tenant 1 strictly more steps' worth
+    assert res.per_tenant[0]["access_fast"] + res.per_tenant[0]["access_slow"] > 0
+    t0 = res.per_tenant[0]["access_fast"] + res.per_tenant[0]["access_slow"]
+    t1 = res.per_tenant[1]["access_fast"] + res.per_tenant[1]["access_slow"]
+    assert t1 > t0
+
+
+def test_replay_trace_forwards_tenant_attribution():
+    src = make_trace("web+cache1", seed=4, total_pages=400)
+    rec = record_trace(src, 4)
+    assert rec.n_tenants == 2
+    assert rec.tenant_names == ["web", "cache1"]
+    assert rec.tenant_of(5) == src.tenant_of(5)
