@@ -1,25 +1,31 @@
-"""Multi-tenant QoS benchmark — tenant-blind TPP vs TPP + QoS arbiter.
+"""Multi-tenant QoS benchmark — tenant-blind TPP vs the control plane.
 
 Runs the noisy-neighbor mix (``web+cache1+data_warehouse``: a
 latency-critical web service, a standard cache, and a churny batch
-data-warehouse job) through the same pool/policy twice — once
-tenant-blind and once with the QoS arbiter (dynamic hotness-weighted
-quotas, priority classes, per-tenant promotion token buckets) — and
-reports per-tenant modeled slowdown, Jain's fairness index and
-quota-violation intervals.  Results land in ``BENCH_qos.json``; the
-headline is the latency-critical tenant's slowdown dropping under
-``tpp+qos`` while the batch neighbor absorbs the tiering penalty.
+data-warehouse job) through the same pool/policy under three controls —
+tenant-blind (NullControl), the QoS arbiter (dynamic hotness-weighted
+quotas + allocation steering, priority classes, per-tenant promotion
+token buckets), and with ``--controller`` the slowdown controller
+(proportional feedback on measured per-tenant slowdown toward per-class
+SLO targets) — and reports per-tenant modeled slowdown, Jain's fairness
+index and quota-violation intervals.  Results land in
+``BENCH_qos.json``; the headline is the latency-critical tenant's
+slowdown dropping under ``tpp+qos`` and further under
+``tpp+controller``, with every tenant's measured slowdown converging to
+within 10% of its SLO target while the batch neighbor absorbs the
+tiering penalty.
 
-  PYTHONPATH=src python -m benchmarks.qos_bench
+  PYTHONPATH=src python -m benchmarks.qos_bench [--controller] [--quick]
 """
 
 from __future__ import annotations
 
 import json
-from typing import List
+import os
+from typing import Dict, List
 
 from repro.core import TieredSimulator, TppConfig, make_trace
-from repro.qos import QosConfig
+from repro.qos import QosConfig, SlowdownControllerConfig
 
 MIX = "web+cache1+data_warehouse"
 CLASSES = ("latency_critical", "standard", "batch")
@@ -32,6 +38,16 @@ SLOW_COST = 3.0
 CFG = TppConfig(demote_budget=512, promote_budget=256, sample_rate=0.1)
 QOS = QosConfig(mode="dynamic", classes=CLASSES,
                 promote_tokens_per_interval=128.0)
+# Controller: per-class slowdown targets the feedback loop converges to
+# (chosen feasible for this mix/geometry — see DESIGN.md §8), measured
+# over a longer horizon so the shares reach steady state.
+CTRL_SLO = {"latency_critical": 1.45, "standard": 1.85, "batch": 2.4}
+CTRL = SlowdownControllerConfig(
+    slo=CTRL_SLO, gain=0.8, slow_cost=SLOW_COST,
+    qos=QosConfig(classes=CLASSES, promote_tokens_per_interval=128.0),
+)
+CTRL_STEPS = 240
+CTRL_CHUNK = 20  # convergence-trajectory sampling interval (steps)
 
 
 def _run(qos, steps: int, measure_from: int, engine: str):
@@ -42,6 +58,20 @@ def _run(qos, steps: int, measure_from: int, engine: str):
         engine=engine, qos=qos,
     )
     return sim.run(steps, measure_from=measure_from)
+
+
+def _merge_json(update: Dict) -> None:
+    """Merge ``update`` into BENCH_qos.json (the two suites co-own it)."""
+    payload = {}
+    if os.path.exists("BENCH_qos.json"):
+        try:
+            with open("BENCH_qos.json") as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload.update(update)
+    with open("BENCH_qos.json", "w") as f:
+        json.dump(payload, f, indent=2)
 
 
 def run(quick: bool = False, engine: str = "vectorized") -> List[str]:
@@ -76,7 +106,7 @@ def run(quick: bool = False, engine: str = "vectorized") -> List[str]:
     improvement = round((lc_base - lc_qos) / lc_base, 4)
     out.append(f"qos/latency_critical_improvement,0.0,{improvement:.1%}")
 
-    payload = {
+    _merge_json({
         "workload": MIX,
         "classes": list(CLASSES),
         "engine": engine,
@@ -88,6 +118,7 @@ def run(quick: bool = False, engine: str = "vectorized") -> List[str]:
         "slow_cost": SLOW_COST,
         "qos_config": {
             "mode": QOS.mode,
+            "steer_allocation": QOS.steer_allocation,
             "promote_tokens_per_interval": QOS.promote_tokens_per_interval,
             "token_burst": QOS.token_burst,
             "min_share": QOS.min_share,
@@ -95,12 +126,92 @@ def run(quick: bool = False, engine: str = "vectorized") -> List[str]:
         "results": results,
         "latency_critical_slowdown": {"tpp": lc_base, "tpp+qos": lc_qos,
                                       "improvement": improvement},
-    }
-    with open("BENCH_qos.json", "w") as f:
-        json.dump(payload, f, indent=2)
+    })
+    return out
+
+
+def run_controller(quick: bool = False, engine: str = "vectorized") -> List[str]:
+    """The slowdown-controller suite: convergence to the SLO targets.
+
+    Runs the noisy-neighbor mix under ``SlowdownController`` in
+    ``CTRL_CHUNK``-step slices, sampling the controller's measured
+    slowdown EWMA and share vector after each slice — the convergence
+    trajectory that lands in ``BENCH_qos.json["controller"]``.
+    """
+    steps = 80 if quick else CTRL_STEPS
+    sim = TieredSimulator(
+        MIX, "tpp", FAST_FRAMES, SLOW_FRAMES, config=CFG,
+        slow_cost=SLOW_COST, seed=1,
+        trace=make_trace(MIX, seed=1, total_pages=TOTAL_PAGES),
+        engine=engine, qos=CTRL,
+    )
+    trajectory = []
+    result = None
+    for done in range(0, steps, CTRL_CHUNK):
+        result = sim.run(min(CTRL_CHUNK, steps - done))
+        trajectory.append({
+            "step": done + CTRL_CHUNK,
+            "slowdown_ewma": [round(float(s), 4)
+                              for s in sim.control.slowdown_ewma],
+            "shares": [round(float(s), 4) for s in sim.control.shares],
+        })
+    slow = result.tenant_slowdowns()  # cumulative (includes warm-up)
+    targets = [CTRL_SLO[c] for c in CLASSES]
+    # Steady-state convergence: the loop oscillates around its targets
+    # with the workloads' phase noise, so judge the *tail mean* of the
+    # measured-slowdown trajectory (last ~100 steps), not one interval.
+    tail = trajectory[-min(5, len(trajectory)):]
+    steady = [
+        sum(row["slowdown_ewma"][t] for row in tail) / len(tail)
+        for t in range(len(CLASSES))
+    ]
+    ratio = [round(s / t, 4) for s, t in zip(steady, targets)]
+
+    out: List[str] = []
+    for t, v in slow.items():
+        out.append(
+            f"qos/controller_slowdown_t{t}_{result.tenant_names[t]},0.0,"
+            f"x{v:.3f}"
+        )
+    for t, r in enumerate(ratio):
+        out.append(f"qos/controller_slo_ratio_t{t},0.0,{r:.3f}")
+    out.append(f"qos/controller_jain,0.0,{result.jains_fairness():.4f}")
+    converged = all(abs(r - 1.0) <= 0.10 for r in ratio)
+    out.append(f"qos/controller_converged_within_10pct,0.0,{converged}")
+
+    _merge_json({
+        "controller": {
+            "slo_targets": {c: CTRL_SLO[c] for c in CLASSES},
+            "gain": CTRL.gain,
+            "steps": steps,
+            "engine": engine,
+            "slowdowns": {
+                f"{t}:{result.tenant_names[t]}:{CLASSES[t]}": v
+                for t, v in slow.items()
+            },
+            "steady_state_slowdown": [round(s, 4) for s in steady],
+            "slo_ratio": ratio,
+            "converged_within_10pct": converged,
+            "jains_index": result.jains_fairness(),
+            "steered": result.vmstat.pgalloc_steered,
+            "shares": [round(float(s), 4) for s in sim.control.shares],
+            "convergence_trajectory": trajectory,
+            "qos": result.qos,
+        },
+    })
     return out
 
 
 if __name__ == "__main__":
-    for line in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--controller", action="store_true",
+                    help="also run the slowdown-controller convergence suite")
+    args = ap.parse_args()
+    for line in run(quick=args.quick):
         print(line)
+    if args.controller:
+        for line in run_controller(quick=args.quick):
+            print(line)

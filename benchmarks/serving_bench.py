@@ -79,7 +79,15 @@ QOS_CHURN_EVERY = 8  # rotate one noisy sequence every N steps
 
 def _qos_noisy_neighbor(cfg, params, qos, steps: int):
     """One latency-critical stream vs a churny batch tenant; returns the
-    stream's final fast-tier residency fraction + engine stats."""
+    stream's final fast-tier residency fraction + engine stats.
+
+    The control plane may *shed* a batch re-admission under fast-tier
+    pressure (``AdmissionError reason="qos_pressure"``) — that is the
+    admission gate working, so sheds are counted and the churn retries
+    next rotation.
+    """
+    from repro.serving import AdmissionError
+
     eng = ServingEngine(cfg, params, EngineConfig(
         page_size=4, num_fast=24, num_slow=256,
         topk_pages=4, recent_pages=2, max_seqs=8,
@@ -93,17 +101,24 @@ def _qos_noisy_neighbor(cfg, params, qos, steps: int):
                          qos_class="latency_critical", tenant=0)
     noisy = [eng.add_request(prompt(), max_new=10_000,
                              qos_class="batch", tenant=1) for _ in range(5)]
+    shed = 0
     for step in range(steps):
         eng.step()
         if step % QOS_CHURN_EVERY == QOS_CHURN_EVERY - 1:
             eng.finish(noisy.pop(0))
-            noisy.append(eng.add_request(prompt(), max_new=10_000,
-                                         qos_class="batch", tenant=1))
+            try:
+                noisy.append(eng.add_request(prompt(), max_new=10_000,
+                                             qos_class="batch", tenant=1))
+            except AdmissionError as e:
+                assert e.reason == "qos_pressure"
+                shed += 1
     seq = eng.seqs[lc]
     n_fast = sum(
         1 for pid in seq.pages if eng.kv.pool.pages[pid].tier == Tier.FAST
     )
-    return n_fast / len(seq.pages), eng.stats()
+    stats = eng.stats()
+    stats["batch_sheds"] = shed
+    return n_fast / len(seq.pages), stats
 
 
 def run(quick: bool = False) -> List[str]:
@@ -152,6 +167,7 @@ def run(quick: bool = False) -> List[str]:
             "local_fraction": round(stats["local_fraction"], 4),
             "demoted": stats["demoted"],
             "promoted": stats["promoted"],
+            "batch_sheds": stats["batch_sheds"],
         }
         out.append(f"serving/qos_{label},0.0,lc_fast_residency={residency:.3f}")
 

@@ -62,6 +62,32 @@ def main() -> None:
     cdf = prof.reaccess_cdf(8)
     print(f"  re-access CDF @4 intervals: {cdf[3]:.1%}")
 
+    # --- multi-tenant SLO control (DESIGN.md §8) ------------------------
+    # Any TieredSimulator takes qos=: a QosConfig arms the quota/token
+    # arbiter, a SlowdownControllerConfig the Equilibria-style feedback
+    # loop that re-divides fast-tier shares each interval so *measured*
+    # per-tenant slowdowns converge to per-class SLO targets.
+    from repro.qos import QosConfig, SlowdownControllerConfig
+
+    ctrl = SlowdownControllerConfig(
+        qos=QosConfig(classes=("latency_critical", "standard", "batch")),
+    )
+    from repro.core import make_trace
+
+    mix = "web+cache1+data_warehouse"
+    sim = TieredSimulator(mix, "tpp", 512, 2400, config=CFG, slow_cost=3.0,
+                          seed=1, engine="vectorized", qos=ctrl,
+                          trace=make_trace(mix, seed=1, total_pages=1950))
+    r = sim.run(160)
+    print("\nSlowdown controller (web+cache1+data_warehouse, 160 steps):")
+    for (tid, slow), tgt in zip(sorted(r.tenant_slowdowns().items()),
+                                r.qos["slo_targets"]):
+        name = r.tenant_names[tid]
+        print(f"  tenant {tid} ({name:15s}) slowdown x{slow:.2f}"
+              f"  → SLO target x{tgt:.2f}")
+    print(f"  steered allocations: {r.vmstat.pgalloc_steered}"
+          f"   shares: {r.qos['shares']}")
+
 
 if __name__ == "__main__":
     main()

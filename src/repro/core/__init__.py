@@ -6,6 +6,10 @@ Public surface:
   :class:`~repro.core.types.PageType` — configuration & enums.
 * :class:`~repro.core.page_pool.PagePool` — two-tier pool + LRU + watermarks
   (the reference engine / executable specification).
+* :class:`~repro.core.control.TieringControl` /
+  :class:`~repro.core.control.NullControl` — the tiering control plane:
+  the allocate/demote/promote decision surface both pools dispatch
+  through (``pool.control``; DESIGN.md §8).
 * :class:`~repro.core.engine.VectorPagePool` — the struct-of-arrays
   vectorized engine (same semantics, fleet-scale throughput) and
   :func:`~repro.core.engine.make_pool` — engine factory.
@@ -21,6 +25,12 @@ Public surface:
 """
 
 from repro.core.chameleon import Chameleon
+from repro.core.control import (
+    NULL_CONTROL,
+    AllocRequest,
+    NullControl,
+    TieringControl,
+)
 from repro.core.engine import PageView, VectorPagePool, make_pool
 from repro.core.page_pool import Page, PagePool
 from repro.core.policy import (
@@ -57,9 +67,13 @@ from repro.core.types import (
 from repro.core.vmstat import VmStat
 
 __all__ = [
+    "AllocRequest",
     "Chameleon",
     "DemoteFail",
     "ENGINES",
+    "NULL_CONTROL",
+    "NullControl",
+    "TieringControl",
     "MultiTenantTrace",
     "POLICY_REGISTRY",
     "Page",

@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.control import NULL_CONTROL, AllocRequest, TieringControl
 from repro.core.types import (
     DemoteFail,
     PageFlags,
@@ -179,10 +180,10 @@ class VectorPagePool:
         self.step = 0
         self.on_migrate = on_migrate
         self.on_evict = on_evict
-        # Multi-tenant QoS hook (repro.qos): None = tenant-blind (today's
-        # behaviour), TenantAccounting = telemetry only, QosArbiter =
-        # telemetry + victim ordering + promotion admission.
-        self.qos = None
+        # The tiering control plane (repro.core.control) — same uniform
+        # dispatch surface as the reference pool; NULL_CONTROL keeps the
+        # disabled path bit-identical to a control-free pool.
+        self.control: TieringControl = NULL_CONTROL
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
 
         cap = self.INITIAL_CAPACITY
@@ -322,16 +323,24 @@ class VectorPagePool:
         page_type: PageType,
         pinned: bool = False,
         prefer: Optional[Tier] = None,
+        tenant: int = -1,
     ) -> PageView:
         """Scalar allocation — mirrors ``PagePool.allocate`` exactly."""
-        if prefer is not None:
-            tier_order: Tuple[Tier, ...] = (
-                prefer, Tier.SLOW if prefer == Tier.FAST else Tier.FAST
-            )
-        elif self.config.file_to_slow and page_type == PageType.FILE:
-            tier_order = (Tier.SLOW, Tier.FAST)
+        if self.config.file_to_slow and page_type == PageType.FILE:
+            default = Tier.SLOW if prefer is None else prefer
         else:
-            tier_order = (Tier.FAST, Tier.SLOW)
+            default = Tier.FAST if prefer is None else prefer
+        first = default
+        if self.control.steers_allocation:
+            first = self.control.steer_allocation(AllocRequest(
+                page_type=page_type, tenant=tenant, pinned=pinned,
+                prefer=prefer, default=default,
+            ))
+            if first != default:
+                self.vmstat.pgalloc_steered += 1
+        tier_order: Tuple[Tier, ...] = (
+            first, Tier.SLOW if first == Tier.FAST else Tier.FAST
+        )
 
         if self.under_alloc_watermark():
             self.vmstat.pgalloc_stall += 1
@@ -366,10 +375,11 @@ class VectorPagePool:
             self.vmstat.pgalloc_fast += 1
         else:
             self.vmstat.pgalloc_slow += 1
+        self.control.note_alloc(pid, tenant, int(tier))
         return PageView(self, pid)
 
     def try_allocate_many(
-        self, page_type: PageType, n: int
+        self, page_type: PageType, n: int, tenants=None
     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         """Place ``n`` same-type pages as one batch; ``(pids, tiers)``.
 
@@ -377,8 +387,17 @@ class VectorPagePool:
         split, per-call ``pgalloc_stall`` accounting, and LRU/frames are
         computed in closed form.  Returns ``None`` when any of those
         calls would raise ``MemoryError`` (caller falls back to the
-        scalar path, which owns the eviction-retry logic).
+        scalar path, which owns the eviction-retry logic) **or** when a
+        steering control is attached — per-allocation steering decisions
+        depend on residency updated by every placement, so they must
+        sequence through the scalar path exactly like the reference
+        engine.
+
+        ``tenants`` is a scalar tenant id or per-allocation array for
+        the control plane's ledger (``note_alloc_many``).
         """
+        if self.control.steers_allocation:
+            return None
         if n == 0:
             return np.empty(0, np.int64), np.empty(0, np.int8)
         f0 = self.free_frames(Tier.FAST)
@@ -441,6 +460,9 @@ class VectorPagePool:
             )
         self.vmstat.pgalloc_fast += k_fast
         self.vmstat.pgalloc_slow += k_slow
+        self.control.note_alloc_many(
+            pids, tenants if tenants is not None else -1, tiers
+        )
         return pids, tiers
 
     def free(self, pid: int) -> None:
@@ -450,8 +472,7 @@ class VectorPagePool:
         self._live[pid] = False
         self._tier[pid] = _NO_TIER
         self.vmstat.pgfree += 1
-        if self.qos is not None:
-            self.qos.note_free(pid, tier)
+        self.control.note_free(pid, tier)
 
     # ------------------------------------------------------------------ #
     # access path
@@ -526,8 +547,10 @@ class VectorPagePool:
         return moved
 
     def end_interval(self) -> None:
-        """Shift every history bitmap left one interval (vector op)."""
+        """Shift every history bitmap left one interval (vector op) and
+        tick the control plane (quota re-division, token refill)."""
         np.left_shift(self._history, _ONE, out=self._history)
+        self.control.note_interval()
 
     # ------------------------------------------------------------------ #
     # migration
@@ -559,8 +582,7 @@ class VectorPagePool:
         ptype = self._ptype[pid].item()
         self._lru_add_head(4 + ptype * 2, pid)  # (SLOW, ptype, inactive)
         self.vmstat.demote_success(ptype == 0)  # PageType.ANON
-        if self.qos is not None:
-            self.qos.note_demote(pid)
+        self.control.note_demote(pid)
         return DemoteFail.NONE
 
     def promote_page(self, pid: int) -> PromoteFail:
@@ -569,20 +591,18 @@ class VectorPagePool:
         if flags & _UNEVICTABLE:
             self.vmstat.promote_fail(PromoteFail.PINNED)
             return PromoteFail.PINNED
-        if self.qos is not None and not self.qos.admit_promotion(pid):
+        if not self.control.admit_promotions((pid,))[0]:
             self.vmstat.promote_fail(PromoteFail.QOS)
             return PromoteFail.QOS
         if not self._move(pid, Tier.FAST):
-            if self.qos is not None:
-                self.qos.refund_promotion(pid)
+            self.control.refund_promotion(pid)
             self.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
             return PromoteFail.TARGET_LOW_MEM
         self._flags[pid] = (flags & _NOT_DEMOTED) | _ACTIVE
         ptype = self._ptype[pid].item()
         self._lru_add_head(ptype * 2 + 1, pid)  # (FAST, ptype, active)
         self.vmstat.promote_success(ptype == 0)  # PageType.ANON
-        if self.qos is not None:
-            self.qos.note_promote(pid)
+        self.control.note_promote(pid)
         return PromoteFail.NONE
 
     def demote_pages(self, pids: Sequence[int]) -> Tuple[int, List[int], int]:
@@ -629,11 +649,63 @@ class VectorPagePool:
                 self._lru_add_head_batch(6, ok[~anon_sel])  # SLOW/FILE/inact
             self.vmstat.demote_success(True, n_anon)
             self.vmstat.demote_success(False, k - n_anon)
-            if self.qos is not None:
-                self.qos.note_demote_many(ok)
+            self.control.note_demote_many(ok)
         if overflow:
             self.vmstat.demote_fail(DemoteFail.SLOW_FULL, len(overflow))
         return k, overflow, 0
+
+    def promote_pages(self, pids: Sequence[int]) -> Tuple[int, int]:
+        """Array-batched promotion; ``(n_promoted, n_failed)``.
+
+        Equivalent to per-pid :meth:`promote_page` calls in order.  The
+        batch path needs (a) no per-page migration hooks, (b) no pinned
+        pages (their failures interleave), and (c) enough free fast
+        frames for the whole batch — then every *admitted* candidate is
+        guaranteed a frame, which is exactly the assumption that makes
+        one batched ``control.admit_promotions`` call sequence-exact
+        (admission models provisional residency of earlier admissions).
+        Anything else falls back to the shared per-pid sequence.
+        """
+        n = len(pids)
+        if n == 0:
+            return 0, 0
+        arr = np.asarray(pids, np.int64)
+        if (n == 1 or self.on_migrate is not None
+                or len(self._stacks[Tier.FAST]) < n
+                or bool(np.any(self._flags[arr] & np.uint8(_UNEVICTABLE)))):
+            from repro.core.page_pool import promote_pages_sequential
+
+            return promote_pages_sequential(self, pids)
+        assert bool(np.all(self._tier[arr] == np.int8(1))), \
+            "promotion source must be SLOW"
+        mask = np.asarray(self.control.admit_promotions(arr), bool)
+        denied = int(n - np.count_nonzero(mask))
+        if denied:
+            self.vmstat.promote_fail(PromoteFail.QOS, denied)
+        ok = arr[mask] if denied else arr
+        k = len(ok)
+        if k:
+            # frames: k fast pops / k slow pushes, in candidate order
+            slow_frames = self._frame[ok].copy()
+            self._frame[ok] = self._stacks[Tier.FAST].pop_many(k)
+            for pid in ok.tolist():  # unlink from the SLOW active lists
+                self._lru_remove(self._lid[pid], pid)
+            self._stacks[Tier.SLOW].push_many(slow_frames)
+            self._flags[ok] = (
+                self._flags[ok] & np.uint8(_NOT_DEMOTED)
+            ) | np.uint8(_ACTIVE)
+            self._tier[ok] = np.int8(int(Tier.FAST))
+            ptypes = self._ptype[ok]
+            anon_sel = ptypes == np.int8(int(PageType.ANON))
+            n_anon = int(np.count_nonzero(anon_sel))
+            if n_anon:
+                self._lru_add_head_batch(1, ok[anon_sel])  # FAST/ANON/act
+            if k - n_anon:
+                self._lru_add_head_batch(3, ok[~anon_sel])  # FAST/FILE/act
+            self.vmstat.promote_success(True, n_anon)
+            self.vmstat.promote_success(False, k - n_anon)
+            self.control.note_promote_many(ok)
+        return k, denied
 
     def evict_page(self, pid: int) -> None:
         if self.on_evict is not None:
@@ -645,10 +717,9 @@ class VectorPagePool:
     # reclaim-candidate scan
     # ------------------------------------------------------------------ #
     def scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]:
-        out = self._scan_reclaim_candidates(tier, nr_to_scan)
-        if self.qos is not None:
-            out = self.qos.order_demotion_victims(out)
-        return out
+        return self.control.order_demotion_victims(
+            self._scan_reclaim_candidates(tier, nr_to_scan)
+        )
 
     def _scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]:
         out: List[int] = []
@@ -745,10 +816,9 @@ class VectorPagePool:
         order = np.lexsort(
             (pids, self._last_touch[pids], self._touch_count[pids])
         )[:limit]
-        out = [int(p) for p in pids[order]]
-        if self.qos is not None:
-            out = self.qos.order_demotion_victims(out)
-        return out
+        return self.control.order_demotion_victims(
+            [int(p) for p in pids[order]]
+        )
 
     def fallback_slow_victim(self) -> Optional[int]:
         n = self._next_pid

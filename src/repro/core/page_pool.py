@@ -23,6 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.control import NULL_CONTROL, AllocRequest, TieringControl
 from repro.core.lru import NodeLru
 from repro.core.types import (
     DemoteFail,
@@ -98,10 +99,13 @@ class PagePool:
         # dst_frame) so the engine can mirror the copy in device buffers.
         self.on_migrate = on_migrate
         self.on_evict = on_evict
-        # Multi-tenant QoS hook (repro.qos): None = tenant-blind (today's
-        # behaviour), TenantAccounting = telemetry only, QosArbiter =
-        # telemetry + victim ordering + promotion admission.
-        self.qos = None
+        # The tiering control plane (repro.core.control): every
+        # allocate/demote/promote decision point and lifecycle event
+        # dispatches through it.  NULL_CONTROL keeps the disabled path
+        # bit-identical to a control-free pool; repro.qos provides
+        # telemetry (TenantAccounting), arbitration (QosArbiter) and
+        # SLO feedback (SlowdownController) implementations.
+        self.control: TieringControl = NULL_CONTROL
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
 
     # ------------------------------------------------------------------ #
@@ -131,6 +135,7 @@ class PagePool:
         page_type: PageType,
         pinned: bool = False,
         prefer: Optional[Tier] = None,
+        tenant: int = -1,
     ) -> Page:
         """Allocate a logical page and back it with a frame.
 
@@ -138,15 +143,30 @@ class PagePool:
           * default — fast-first, overflow to slow when fast is at its
             min watermark (default Linux / TPP behaviour);
           * ``file_to_slow`` (§5.4) — FILE pages slow-first, overflow fast;
-          * ``prefer`` overrides (used by tests / the ideal baseline).
+          * ``prefer`` overrides (used by tests / the ideal baseline);
+          * a steering control (``control.steers_allocation``) may
+            replace the preference per request (tenant-aware §5.4
+            generalization) — watermark enforcement below is unchanged,
+            so steering can never violate watermarks.
+
+        ``tenant`` attributes the page for the control plane (−1 =
+        untracked).
         """
-        tier_order: Tuple[Tier, ...]
-        if prefer is not None:
-            tier_order = (prefer, Tier.SLOW if prefer == Tier.FAST else Tier.FAST)
-        elif self.config.file_to_slow and page_type == PageType.FILE:
-            tier_order = (Tier.SLOW, Tier.FAST)
+        if self.config.file_to_slow and page_type == PageType.FILE:
+            default = Tier.SLOW if prefer is None else prefer
         else:
-            tier_order = (Tier.FAST, Tier.SLOW)
+            default = Tier.FAST if prefer is None else prefer
+        first = default
+        if self.control.steers_allocation:
+            first = self.control.steer_allocation(AllocRequest(
+                page_type=page_type, tenant=tenant, pinned=pinned,
+                prefer=prefer, default=default,
+            ))
+            if first != default:
+                self.vmstat.pgalloc_steered += 1
+        tier_order: Tuple[Tier, ...] = (
+            first, Tier.SLOW if first == Tier.FAST else Tier.FAST
+        )
 
         if self.under_alloc_watermark():
             self.vmstat.pgalloc_stall += 1
@@ -190,6 +210,7 @@ class PagePool:
             self.vmstat.pgalloc_fast += 1
         else:
             self.vmstat.pgalloc_slow += 1
+        self.control.note_alloc(pid, tenant, int(tier))
         return page
 
     def free(self, pid: int) -> None:
@@ -197,8 +218,7 @@ class PagePool:
         self.lru[page.tier].discard(pid, page.page_type)
         self._free[page.tier].append(page.frame)
         self.vmstat.pgfree += 1
-        if self.qos is not None:
-            self.qos.note_free(pid, int(page.tier))
+        self.control.note_free(pid, int(page.tier))
 
     # ------------------------------------------------------------------ #
     # access path
@@ -286,9 +306,11 @@ class PagePool:
         return moved
 
     def end_interval(self) -> None:
-        """Close an access interval: shift history bitmaps (Chameleon §3)."""
+        """Close an access interval: shift history bitmaps (Chameleon §3)
+        and tick the control plane (quota re-division, token refill)."""
         for page in self.pages.values():
             page.history = (page.history << 1) & ((1 << 64) - 1)
+        self.control.note_interval()
 
     # ------------------------------------------------------------------ #
     # migration (§5.1) — demote / promote / evict
@@ -322,8 +344,7 @@ class PagePool:
         page.flags &= ~(PageFlags.ACTIVE | PageFlags.ACCESSED)
         self.lru[Tier.SLOW].insert(pid, page.page_type, active=False)
         self.vmstat.demote_success(page.page_type == PageType.ANON)
-        if self.qos is not None:
-            self.qos.note_demote(pid)
+        self.control.note_demote(pid)
         return DemoteFail.NONE
 
     def promote_page(self, pid: int) -> PromoteFail:
@@ -338,12 +359,11 @@ class PagePool:
         if page.pinned:
             self.vmstat.promote_fail(PromoteFail.PINNED)
             return PromoteFail.PINNED
-        if self.qos is not None and not self.qos.admit_promotion(pid):
+        if not self.control.admit_promotions((pid,))[0]:
             self.vmstat.promote_fail(PromoteFail.QOS)
             return PromoteFail.QOS
         if not self._move(page, Tier.FAST):
-            if self.qos is not None:
-                self.qos.refund_promotion(pid)
+            self.control.refund_promotion(pid)
             self.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
             return PromoteFail.TARGET_LOW_MEM
         page.flags &= ~PageFlags.DEMOTED  # PG_demoted cleared on promotion
@@ -351,8 +371,7 @@ class PagePool:
         page.flags |= PageFlags.ACTIVE
         self.lru[Tier.FAST].insert(pid, page.page_type, active=True)
         self.vmstat.promote_success(page.page_type == PageType.ANON)
-        if self.qos is not None:
-            self.qos.note_promote(pid)
+        self.control.note_promote(pid)
         return PromoteFail.NONE
 
     def demote_pages(self, pids: Sequence[int]) -> Tuple[int, List[int], int]:
@@ -366,6 +385,17 @@ class PagePool:
         this with an array-batched implementation.
         """
         return demote_pages_sequential(self, pids)
+
+    def promote_pages(self, pids: Sequence[int]) -> Tuple[int, int]:
+        """Apply a batch of promotions; ``(n_promoted, n_failed)``.
+
+        Exactly equivalent to calling :meth:`promote_page` per pid in
+        order — admission (``control.admit_promotions``), migration and
+        failure accounting sequence identically.  The vectorized pool
+        overrides this with an array-batched implementation that makes
+        one admission call for the whole batch.
+        """
+        return promote_pages_sequential(self, pids)
 
     def evict_page(self, pid: int) -> None:
         """Reclaim a page entirely (swap-out analogue; §5.1 fallback)."""
@@ -384,14 +414,13 @@ class PagePool:
         Paper §5.1: *"along with inactive file pages, we scan inactive
         anon pages for reclamation candidate selection"* — both types are
         scanned, proportionally to list size (kernel scan balance).
-        With a QoS arbiter attached, candidates from over-quota tenants
-        are moved to the front (demoted first) — a pure reorder of the
-        scan result, identical across engines.
+        The control plane may reorder the result (e.g. over-quota
+        tenants demote first) — a pure reorder of the scan output,
+        identical across engines.
         """
-        out = self._scan_reclaim_candidates(tier, nr_to_scan)
-        if self.qos is not None:
-            out = self.qos.order_demotion_victims(out)
-        return out
+        return self.control.order_demotion_victims(
+            self._scan_reclaim_candidates(tier, nr_to_scan)
+        )
 
     def _scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]:
         node = self.lru[tier]
@@ -475,10 +504,7 @@ class PagePool:
              if p.tier == Tier.FAST and not p.pinned),
             key=lambda p: (p.touch_count, p.last_touch_step),
         )[:limit]
-        out = [p.pid for p in victims]
-        if self.qos is not None:
-            out = self.qos.order_demotion_victims(out)
-        return out
+        return self.control.order_demotion_victims([p.pid for p in victims])
 
     def fallback_slow_victim(self) -> Optional[int]:
         """Any unpinned slow page (OOM last resort), oldest pid first."""
@@ -548,3 +574,21 @@ def demote_pages_sequential(pool, pids: Sequence[int]) -> Tuple[int, List[int], 
         else:
             n_failed += 1
     return n_ok, overflow, n_failed
+
+
+def promote_pages_sequential(pool, pids: Sequence[int]) -> Tuple[int, int]:
+    """Per-pid promotion sequence shared by both pool engines.
+
+    This loop *is* the batch-promotion semantics; the vectorized pool
+    falls back to it whenever exactness demands per-page interleaving
+    (migration hooks, pinned pages, fast-tier frame exhaustion
+    mid-batch).
+    """
+    n_ok = 0
+    n_failed = 0
+    for pid in pids:
+        if pool.promote_page(pid) == PromoteFail.NONE:
+            n_ok += 1
+        else:
+            n_failed += 1
+    return n_ok, n_failed

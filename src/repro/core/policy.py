@@ -66,6 +66,11 @@ class PlacementPool(Protocol):
     (reference, dict-of-``Page``) and
     :class:`~repro.core.engine.VectorPagePool` (struct-of-arrays).
     Only the subset policies use is listed; see DESIGN.md §3.
+
+    Every pool also carries a ``control``
+    (:class:`~repro.core.control.TieringControl`) — the tiering control
+    plane its allocate/demote/promote decision points dispatch through;
+    policies never consult it directly (DESIGN.md §8).
     """
 
     step: int
@@ -85,10 +90,11 @@ class PlacementPool(Protocol):
     def scan_reclaim_candidates(self, tier: Tier, nr_to_scan: int) -> List[int]: ...
     def demotion_victims(self, limit: int) -> List[int]: ...
 
-    # migration
+    # migration (batched forms are exactly equivalent to per-pid calls)
     def demote_page(self, pid: int): ...
     def demote_pages(self, pids): ...
     def promote_page(self, pid: int): ...
+    def promote_pages(self, pids): ...
     def evict_page(self, pid: int) -> None: ...
 
     # watermarks / frames

@@ -223,22 +223,28 @@ class TieredSimulator:
         self._evicted_pids: set = set()
         self._last_evicted: Optional[int] = None
         self.pool.on_evict = self._note_evict
-        # -- multi-tenant QoS (repro.qos) ----------------------------- #
-        # ``qos`` is a QosConfig → full arbitration; with a plain
-        # multi-tenant trace a telemetry-only TenantAccounting is
-        # attached so per-tenant promote/demote attribution is always
-        # available.  Imports are lazy to keep repro.core importable
-        # from repro.qos without a cycle.
+        # -- tiering control plane (repro.core.control / repro.qos) --- #
+        # ``qos`` is a QosConfig (→ QosArbiter), a
+        # SlowdownControllerConfig (→ SlowdownController) or a ready
+        # TieringControl; with a plain multi-tenant trace a
+        # telemetry-only TenantAccounting is attached so per-tenant
+        # promote/demote attribution is always available.  Imports are
+        # lazy to keep repro.core importable from repro.qos without a
+        # cycle.
         n_tenants = getattr(self.trace, "n_tenants", 1)
+        self.control = None
         if qos is not None:
-            from repro.qos.arbiter import QosArbiter
+            from repro.qos import make_control
 
-            self.pool.qos = QosArbiter(n_tenants, fast_frames, config=qos)
+            self.control = make_control(qos, n_tenants, fast_frames)
         elif self._tenant_of is not None:
             from repro.qos.accounting import TenantAccounting
 
-            self.pool.qos = TenantAccounting(n_tenants)
-        self._qos_counts = np.zeros(n_tenants, np.int64)
+            self.control = TenantAccounting(n_tenants)
+        if self.control is not None:
+            self.pool.control = self.control
+        self._fast_counts = np.zeros(n_tenants, np.int64)
+        self._slow_counts = np.zeros(n_tenants, np.int64)
 
     def _note_evict(self, pid: int) -> None:
         self._evicted_pids.add(pid)
@@ -276,8 +282,9 @@ class TieredSimulator:
         demote_rate: List[int] = []
         alloc_fast_rate: List[int] = []
         tenant_of = self._tenant_of
-        qos = self.pool.qos
-        qos_counts = self._qos_counts
+        ctl = self.control
+        fast_counts = self._fast_counts
+        slow_counts = self._slow_counts
 
         for step_no in range(steps):
             ev = next(self.trace)
@@ -324,10 +331,12 @@ class TieredSimulator:
                     tid = tenant_of(idx)
                     acc = self._tenant_acc(tid)
                     acc["access_slow" if tier == Tier.SLOW else "access_fast"] += 1
-                    if qos is not None:
-                        qos_counts[tid] += 1
-                elif qos is not None:
-                    qos_counts[0] += 1
+                    if ctl is not None:
+                        (slow_counts if tier == Tier.SLOW
+                         else fast_counts)[tid] += 1
+                elif ctl is not None:
+                    (slow_counts if tier == Tier.SLOW
+                     else fast_counts)[0] += 1
                 step_ideal += 1.0
                 if self.profiler is not None:
                     prof_events.append((pid, self.pool.pages[pid].page_type))
@@ -335,9 +344,10 @@ class TieredSimulator:
                 self.profiler.record(prof_events)
 
             # -- policy (uniform protocol dispatch) ------------------- #
-            if qos is not None:
-                qos.note_access_counts(qos_counts)
-                qos_counts[:] = 0
+            if ctl is not None:
+                ctl.note_access_tiers(fast_counts, slow_counts)
+                fast_counts[:] = 0
+                slow_counts[:] = 0
             report = self.policy.step(slow_hits, fast_hits)
             step_time += (report.demoted + report.promoted) * self.migrate_cost
             if step_no >= measure_from:
@@ -354,9 +364,7 @@ class TieredSimulator:
             alloc_fast_rate.append(vs.pgalloc_fast - alloc_fast_before)
 
             if (step_no + 1) % self.interval_steps == 0:
-                self.pool.end_interval()
-                if qos is not None:
-                    qos.end_interval()
+                self.pool.end_interval()  # also ticks control.note_interval
                 if self.profiler is not None:
                     self.profiler.end_interval()
 
@@ -380,22 +388,20 @@ class TieredSimulator:
 
     def _alloc_idx_vec(self, idx: int, ptype: PageType) -> int:
         """Scalar allocation with the eviction-retry OOM handler."""
+        tid = self._tenant_of(idx) if self._tenant_of is not None else 0
         try:
-            page = self.pool.allocate(ptype)
+            page = self.pool.allocate(ptype, tenant=tid)
         except MemoryError:
             victim = self._coldest_slow_page()
             if victim is None:
                 raise
             self.pool.evict_page(victim)
-            page = self.pool.allocate(ptype)
+            page = self.pool.allocate(ptype, tenant=tid)
         self._ensure_idx_capacity(idx)
         self._v_pid_of[idx] = page.pid
         self._v_ptype_of[idx] = int(ptype)
-        tid = self._tenant_of(idx) if self._tenant_of is not None else 0
         if self._tenant_of is not None:
             self._tenant_acc(tid)["allocated"] += 1
-        if self.pool.qos is not None:
-            self.pool.qos.register_page(page.pid, tid, int(page.tier))
         return page.pid
 
     def _run_vectorized(self, steps: int, measure_from: int) -> SimResult:
@@ -410,8 +416,9 @@ class TieredSimulator:
         slow_tier = np.int8(int(Tier.SLOW))
         tenant_arr = self._tenant_of_array
         n_tenants = getattr(self.trace, "n_tenants", 1)
-        qos = self.pool.qos
-        qos_counts = self._qos_counts
+        ctl = self.control
+        fast_counts = self._fast_counts
+        slow_counts = self._slow_counts
 
         for step_no in range(steps):
             ev = next(self.trace)
@@ -429,9 +436,11 @@ class TieredSimulator:
                 run_idx = np.fromiter(
                     (a[0] for a in allocs[i:j]), np.int64, count=j - i
                 )
-                placed = pool.try_allocate_many(pt, j - i)
+                run_tids = tenant_arr(run_idx) if tenant_arr is not None else 0
+                placed = pool.try_allocate_many(pt, j - i, tenants=run_tids)
                 if placed is None:
-                    # near-OOM: per-page path owns the eviction-retry
+                    # near-OOM or a steering control: the per-page path
+                    # owns eviction-retry + per-allocation steering
                     for a in allocs[i:j]:
                         self._alloc_idx_vec(a[0], pt)
                 else:
@@ -439,16 +448,10 @@ class TieredSimulator:
                     self._ensure_idx_capacity(int(run_idx.max()))
                     self._v_pid_of[run_idx] = pids
                     self._v_ptype_of[run_idx] = np.int16(int(pt))
-                    run_tids = None
                     if tenant_arr is not None:
-                        run_tids = tenant_arr(run_idx)
                         tids = np.bincount(run_tids, minlength=n_tenants)
                         for tid in np.flatnonzero(tids):
                             self._tenant_acc(int(tid))["allocated"] += int(tids[tid])
-                    if qos is not None:
-                        qos.register_pages(
-                            pids, run_tids if run_tids is not None else 0, tiers
-                        )
                 i = j
 
             # -- frees ----------------------------------------------- #
@@ -510,10 +513,12 @@ class TieredSimulator:
                             acc = self._tenant_acc(int(tid))
                             acc["access_slow"] += int(slow_cnt[tid])
                             acc["access_fast"] += int(fast_cnt[tid])
-                        if qos is not None:
-                            qos_counts += slow_cnt + fast_cnt
-                    elif qos is not None:
-                        qos_counts[0] += n_chunk
+                        if ctl is not None:
+                            fast_counts += fast_cnt
+                            slow_counts += slow_cnt
+                    elif ctl is not None:
+                        fast_counts[0] += n_chunk - n_slow
+                        slow_counts[0] += n_slow
                     if self.profiler is not None:
                         for p in chunk_pids.tolist():
                             prof_events.append((p, pool.ptype_of(p)))
@@ -549,10 +554,12 @@ class TieredSimulator:
                         acc = self._tenant_acc(tid)
                         acc["access_slow" if tier == Tier.SLOW
                             else "access_fast"] += 1
-                        if qos is not None:
-                            qos_counts[tid] += 1
-                    elif qos is not None:
-                        qos_counts[0] += 1
+                        if ctl is not None:
+                            (slow_counts if tier == Tier.SLOW
+                             else fast_counts)[tid] += 1
+                    elif ctl is not None:
+                        (slow_counts if tier == Tier.SLOW
+                         else fast_counts)[0] += 1
                     step_ideal += 1.0
                     if self.profiler is not None:
                         prof_events.append((pid, pool.ptype_of(pid)))
@@ -570,9 +577,10 @@ class TieredSimulator:
             )
 
             # -- policy (uniform protocol dispatch) ------------------- #
-            if qos is not None:
-                qos.note_access_counts(qos_counts)
-                qos_counts[:] = 0
+            if ctl is not None:
+                ctl.note_access_tiers(fast_counts, slow_counts)
+                fast_counts[:] = 0
+                slow_counts[:] = 0
             report = self.policy.step(slow_hits.tolist(), fast_hits.tolist())
             step_time += (report.demoted + report.promoted) * self.migrate_cost
             if step_no >= measure_from:
@@ -589,9 +597,7 @@ class TieredSimulator:
             alloc_fast_rate.append(vs.pgalloc_fast - alloc_fast_before)
 
             if (step_no + 1) % self.interval_steps == 0:
-                pool.end_interval()
-                if qos is not None:
-                    qos.end_interval()
+                pool.end_interval()  # also ticks control.note_interval
                 if self.profiler is not None:
                     self.profiler.end_interval()
 
@@ -603,15 +609,18 @@ class TieredSimulator:
     def _result(self, steps, total_accesses, modeled_time, ideal_time,
                 local_frac, promote_rate, demote_rate,
                 alloc_fast_rate) -> SimResult:
-        qos = self.pool.qos
+        ctl = self.control
         per_tenant = self._per_tenant if self._tenant_of is not None else None
-        if per_tenant is not None and qos is not None:
+        if (per_tenant is not None and ctl is not None
+                and hasattr(ctl, "promoted_total")):
             # fold the accounting ledger's migration attribution in, so
-            # per-tenant counters cover the full vmstat surface
-            for tid in range(qos.n_tenants):
+            # per-tenant counters cover the full vmstat surface (only
+            # ledger-keeping controls have one — a bare TieringControl
+            # passed via qos= has no per-tenant state to fold)
+            for tid in range(ctl.n_tenants):
                 acc = self._tenant_acc(tid)
-                acc["promoted"] = int(qos.promoted_total[tid])
-                acc["demoted"] = int(qos.demoted_total[tid])
+                acc["promoted"] = int(ctl.promoted_total[tid])
+                acc["demoted"] = int(ctl.demoted_total[tid])
         return SimResult(
             policy=self.policy_name,
             workload=self.workload,
@@ -628,13 +637,14 @@ class TieredSimulator:
             tenant_names=getattr(self.trace, "tenant_names", None),
             slow_cost=self.slow_cost,
             refault_cost=self.refault_cost,
-            qos=qos.qos_summary() if qos is not None else None,
+            qos=ctl.qos_summary() if ctl is not None else None,
         )
 
     # ---------------------------------------------------------------- #
     def _alloc_idx(self, idx: int, ptype: PageType) -> None:
+        tid = self._tenant_of(idx) if self._tenant_of is not None else 0
         try:
-            page = self.pool.allocate(ptype)
+            page = self.pool.allocate(ptype, tenant=tid)
         except MemoryError:
             # Both tiers full: evict the coldest unpinned slow page, then
             # retry (the engine-level OOM handler).
@@ -642,14 +652,11 @@ class TieredSimulator:
             if victim is None:
                 raise
             self.pool.evict_page(victim)
-            page = self.pool.allocate(ptype)
+            page = self.pool.allocate(ptype, tenant=tid)
         self._pid_of[idx] = page.pid
         self._ptype_of[idx] = ptype
-        tid = self._tenant_of(idx) if self._tenant_of is not None else 0
         if self._tenant_of is not None:
             self._tenant_acc(tid)["allocated"] += 1
-        if self.pool.qos is not None:
-            self.pool.qos.register_page(page.pid, tid, int(page.tier))
 
     def _coldest_slow_page(self) -> Optional[int]:
         cands = self.pool.scan_reclaim_candidates(Tier.SLOW, 1)
@@ -678,7 +685,9 @@ def run_policy_comparison(
     ``workload`` may be a single workload name or a ``+``-joined
     multi-tenant mix; ``engine`` selects the reference or vectorized
     placement engine (identical results, different speed); ``qos`` is an
-    optional :class:`~repro.qos.quota.QosConfig` applied to every policy
+    optional :class:`~repro.qos.quota.QosConfig` /
+    :class:`~repro.qos.controller.SlowdownControllerConfig` (or ready
+    :class:`~repro.core.control.TieringControl`) applied to every policy
     run (the ideal baseline stays unarbitrated — it has no slow tier).
     """
     results: Dict[str, SimResult] = {}

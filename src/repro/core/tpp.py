@@ -31,7 +31,7 @@ in the engine (``on_migrate`` hook of the pool).
 
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Iterable, List, Sequence
 
 import numpy as np
 
@@ -79,9 +79,39 @@ class TppPolicy:
         return [pid for pid, k in zip(slow_hits, keep) if k]
 
     def _promote(self, candidates: Iterable[int], report: StepReport) -> None:
+        """Promotion control loop, batched without changing semantics.
+
+        Candidates that clear every gate are queued and applied through
+        ``pool.promote_pages`` (one batched admission + migration call —
+        the fleet-scale fix for the former per-pid ``promote_page``
+        loop).  The queue flushes whenever deferral could change a later
+        decision — a re-hit on a queued page, the budget verdict, or the
+        fast tier running out of headroom — so the VmStat trajectory and
+        every placement decision are bit-identical to the sequential
+        per-pid loop (``tests/test_control.py`` pins this).
+        """
         pool = self.pool
         budget = self.config.promote_budget
+        # The coupled ablation gates each promotion on the *current*
+        # watermark, which every success moves — keep it per-pid.
+        defer = self.config.decoupled
+        pending: List[int] = []
+        pending_set: set = set()
+
+        def flush() -> None:
+            if not pending:
+                return
+            n_ok, n_failed = pool.promote_pages(pending)
+            report.promoted += n_ok
+            report.promote_failed += n_failed
+            pending.clear()
+            pending_set.clear()
+
         for pid in candidates:
+            if pid in pending_set:
+                # re-hit on a queued page: settle the queue so the
+                # liveness/tier checks below see the promoted state
+                flush()
             if not pool.is_slow_live(pid):
                 continue  # freed or already migrated this step
             pool.vmstat.pgpromote_sampled += 1
@@ -98,6 +128,8 @@ class TppPolicy:
             if pool.is_demoted(pid):
                 pool.vmstat.pgpromote_candidate_demoted += 1
 
+            if report.promoted + len(pending) >= budget:
+                flush()  # settle actual successes before the verdict
             if report.promoted >= budget:
                 pool.vmstat.promote_fail(PromoteFail.BUDGET)
                 report.promote_failed += 1
@@ -109,9 +141,11 @@ class TppPolicy:
                 # promotions land), so promotion pressure below the
                 # headroom triggers more background demotion within the
                 # same interval — not a one-shot snapshot.
-                if (pool.free_frames(Tier.FAST) == 0
-                        and report.demoted < self.config.demote_budget):
-                    self._demote(report)
+                if pool.free_frames(Tier.FAST) - len(pending) <= 0:
+                    flush()
+                    if (pool.free_frames(Tier.FAST) == 0
+                            and report.demoted < self.config.demote_budget):
+                        self._demote(report)
             elif pool.under_alloc_watermark():
                 # Coupled ablation (Fig. 17): reclaim serves allocation
                 # only; promotion is watermark-gated and starves under
@@ -119,11 +153,16 @@ class TppPolicy:
                 pool.vmstat.promote_fail(PromoteFail.TARGET_LOW_MEM)
                 report.promote_failed += 1
                 continue
-            res = pool.promote_page(pid)
-            if res == PromoteFail.NONE:
-                report.promoted += 1
+            if defer:
+                pending.append(pid)
+                pending_set.add(pid)
             else:
-                report.promote_failed += 1
+                res = pool.promote_page(pid)
+                if res == PromoteFail.NONE:
+                    report.promoted += 1
+                else:
+                    report.promote_failed += 1
+        flush()
 
     # ------------------------------------------------------------------ #
     # demotion path (§5.1 + §5.2)

@@ -49,6 +49,9 @@ class VmStat:
     pgalloc_fast: int = 0
     pgalloc_slow: int = 0  # overflow or type-aware slow-first allocations
     pgalloc_stall: int = 0  # allocations that found fast below wm_alloc
+    # Allocations whose tier preference was changed by the tiering
+    # control plane (e.g. an over-quota tenant steered slow-first).
+    pgalloc_steered: int = 0
     pgfree: int = 0
 
     # -- LRU churn ---------------------------------------------------------

@@ -1,31 +1,41 @@
-"""Multi-tenant QoS: fair tiering arbitration over the placement engines.
+"""Multi-tenant QoS: fair tiering control over the placement engines.
 
 TPP (§6) is tenant-blind — on a shared host every tenant competes for
 the same fast-tier headroom, so a churny low-value job can evict a
-latency-critical service's hot pages.  This package adds the missing
-control layer (Equilibria-style fair multi-tenant tiering):
+latency-critical service's hot pages.  This package provides the
+tenant-aware implementations of the core tiering control plane
+(:class:`~repro.core.control.TieringControl`, attached as
+``pool.control``; DESIGN.md §8):
 
-* :class:`~repro.qos.accounting.TenantAccounting` — vectorized
-  per-tenant residency/hotness/migration accounting, maintained as
-  arrays alongside either page pool (the NeoMem-style cheap telemetry).
-* :class:`~repro.qos.quota.QosConfig` — per-tenant fast-tier quotas:
-  static shares or a dynamic mode that re-divides headroom each interval
-  from measured hotness, weighted by priority class
-  (``latency_critical > standard > batch``).
-* :class:`~repro.qos.arbiter.QosArbiter` — hooks the demotion
-  victim-selection and promotion-admission paths of **both**
-  ``PagePool`` and ``VectorPagePool`` (over-quota tenants demote first;
-  promotions are rate-limited per tenant by a token bucket), with
-  bit-identical semantics across engines (tests/test_qos.py).
+* :class:`~repro.qos.accounting.TenantAccounting` — telemetry only:
+  vectorized per-tenant residency/hotness/migration accounting with
+  every decision point neutral (placement unchanged).
+* :class:`~repro.qos.arbiter.QosArbiter` — telemetry + arbitration at
+  all three decision points: over-quota tenants' new pages steer
+  slow-first at allocation (``pgalloc_steered``), their reclaim
+  candidates demote first, and promotions are admitted in batch against
+  per-tenant quotas + token buckets
+  (:class:`~repro.qos.quota.QosConfig`: static shares or dynamic
+  hotness-weighted re-division, priority classes
+  ``latency_critical > standard > batch``).
+* :class:`~repro.qos.controller.SlowdownController` — the Equilibria
+  path: replaces static priority weights with a proportional feedback
+  loop that re-divides fair shares each interval from *measured*
+  per-tenant slowdowns toward per-class SLO targets
+  (:class:`~repro.qos.controller.SlowdownControllerConfig`).
 
-The hook surface is the pools' ``pool.qos`` attribute: ``None`` (today's
-tenant-blind behaviour, bit-identical to pre-QoS output), a bare
-``TenantAccounting`` (telemetry only, placement unchanged), or a
-``QosArbiter`` (telemetry + arbitration).
+:func:`make_control` maps a config (or ready control) onto the right
+implementation — the simulator and serving engine both use it.
 """
 
+from repro.core.control import TieringControl
 from repro.qos.accounting import TenantAccounting
 from repro.qos.arbiter import QosArbiter
+from repro.qos.controller import (
+    DEFAULT_SLO,
+    SlowdownController,
+    SlowdownControllerConfig,
+)
 from repro.qos.quota import (
     DEFAULT_PRIORITY,
     QOS_CLASSES,
@@ -36,14 +46,38 @@ from repro.qos.quota import (
     token_refill,
 )
 
+
+def make_control(spec, n_tenants: int, fast_frames: int) -> TieringControl:
+    """Build the control a ``qos=`` argument asks for.
+
+    ``spec`` may be a :class:`QosConfig` (→ :class:`QosArbiter`), a
+    :class:`SlowdownControllerConfig` (→ :class:`SlowdownController`),
+    or an already-constructed :class:`TieringControl` (used as-is).
+    """
+    if isinstance(spec, TieringControl):
+        return spec
+    if isinstance(spec, SlowdownControllerConfig):
+        return SlowdownController(n_tenants, fast_frames, config=spec)
+    if isinstance(spec, QosConfig):
+        return QosArbiter(n_tenants, fast_frames, config=spec)
+    raise TypeError(
+        f"qos spec must be a QosConfig, SlowdownControllerConfig or "
+        f"TieringControl, got {type(spec).__name__}"
+    )
+
+
 __all__ = [
     "DEFAULT_PRIORITY",
+    "DEFAULT_SLO",
     "QOS_CLASSES",
     "QosArbiter",
     "QosConfig",
+    "SlowdownController",
+    "SlowdownControllerConfig",
     "TenantAccounting",
     "class_weights",
     "dynamic_quotas",
+    "make_control",
     "static_quotas",
     "token_refill",
 ]

@@ -1,14 +1,17 @@
 """Vectorized per-tenant residency / hotness / migration accounting.
 
 :class:`TenantAccounting` is the telemetry half of the QoS subsystem: a
-struct-of-arrays ledger indexed by tenant id, maintained alongside
-either page pool via the ``pool.qos`` hook surface (DESIGN.md §7).  It
-tracks, per tenant:
+struct-of-arrays ledger indexed by tenant id, implemented as a
+:class:`~repro.core.control.TieringControl` so either page pool keeps it
+in sync through the uniform ``pool.control`` lifecycle events
+(DESIGN.md §8).  It tracks, per tenant:
 
 * **residency** — live fast-tier / slow-tier page counts (updated on
-  register/free/demote/promote, so reads are O(1) with no pool scan);
+  alloc/free/demote/promote notes, so reads are O(1) with no pool scan);
 * **hotness** — an EWMA of per-interval access counts (the cheap
-  NeoMem-style estimate the dynamic quota mode divides headroom by);
+  NeoMem-style estimate the dynamic quota mode divides headroom by),
+  plus the per-interval fast/slow access split the slowdown controller
+  measures per-tenant slowdown from;
 * **migrations** — promote/demote counts, both cumulative (for the
   ``SimResult.per_tenant`` attribution) and per-interval.
 
@@ -19,24 +22,25 @@ updates (the reference pool's per-page paths) or one ``bincount`` (the
 vectorized pool's batch paths) — both produce identical counter states,
 which is what keeps the two engines bit-identical under QoS.
 
-The class also defines the *neutral* arbitration surface
-(:meth:`order_demotion_victims` returns candidates unchanged,
-:meth:`admit_promotion` always admits): attaching a bare
-``TenantAccounting`` adds telemetry without changing placement.
-:class:`~repro.qos.arbiter.QosArbiter` overrides both.
+A bare ``TenantAccounting`` keeps every *decision point* neutral
+(default allocation steering, victims unreordered, every promotion
+admitted): attaching it adds telemetry without changing placement.
+:class:`~repro.qos.arbiter.QosArbiter` overrides the decisions.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Union
 
 import numpy as np
+
+from repro.core.control import TieringControl
 
 _FAST = 0  # Tier.FAST — plain int for the scalar hot paths
 
 
-class TenantAccounting:
-    """Per-tenant SoA ledger + neutral arbitration hooks (``pool.qos``)."""
+class TenantAccounting(TieringControl):
+    """Per-tenant SoA ledger + neutral decision surface (``pool.control``)."""
 
     INITIAL_PID_CAPACITY = 1024
 
@@ -53,8 +57,11 @@ class TenantAccounting:
         self.demoted_total = np.zeros(n, np.int64)
         self.promoted_interval = np.zeros(n, np.int64)
         self.demoted_interval = np.zeros(n, np.int64)
-        # hotness
+        # hotness (total + tier split; the split feeds the slowdown
+        # controller's per-tenant measured-slowdown estimate)
         self.access_interval = np.zeros(n, np.int64)
+        self.access_fast_interval = np.zeros(n, np.int64)
+        self.access_slow_interval = np.zeros(n, np.int64)
         self.hot_ewma = np.zeros(n, np.float64)
         self.intervals = 0
 
@@ -70,6 +77,10 @@ class TenantAccounting:
         grown[:cap] = self._tenant_of_pid
         self._tenant_of_pid = grown
 
+    def configure_tenant(self, tenant: int, qos_class: str) -> None:
+        """Telemetry keeps no classes — just make room for the tenant."""
+        self.ensure_tenants(tenant + 1)
+
     def ensure_tenants(self, n: int) -> None:
         """Grow every per-tenant array to hold at least ``n`` tenants."""
         if n <= self.n_tenants:
@@ -77,7 +88,8 @@ class TenantAccounting:
         pad = n - self.n_tenants
         for name in ("fast_pages", "slow_pages", "promoted_total",
                      "demoted_total", "promoted_interval", "demoted_interval",
-                     "access_interval"):
+                     "access_interval", "access_fast_interval",
+                     "access_slow_interval"):
             setattr(self, name, np.concatenate(
                 [getattr(self, name), np.zeros(pad, np.int64)]))
         self.hot_ewma = np.concatenate(
@@ -93,8 +105,20 @@ class TenantAccounting:
             return int(self._tenant_of_pid[pid])
         return -1
 
-    def register_page(self, pid: int, tenant: int, tier: int) -> None:
-        """Scalar registration (the reference pool's allocation path)."""
+    def _tenants_of(self, pids: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`tenant_of_page` (−1 for out-of-range)."""
+        out = np.full(len(pids), -1, np.int64)
+        in_range = (pids >= 0) & (pids < len(self._tenant_of_pid))
+        out[in_range] = self._tenant_of_pid[pids[in_range]]
+        return out
+
+    # ---------------------------------------------------------------- #
+    # pool lifecycle notes (the TieringControl surface)
+    # ---------------------------------------------------------------- #
+    def note_alloc(self, pid: int, tenant: int, tier: int) -> None:
+        """Scalar allocation note (the reference pool's path)."""
+        if tenant < 0:
+            return
         self._ensure_pid_capacity(pid)
         self._tenant_of_pid[pid] = tenant
         if int(tier) == _FAST:
@@ -102,32 +126,34 @@ class TenantAccounting:
         else:
             self.slow_pages[tenant] += 1
 
-    def register_pages(
+    def note_alloc_many(
         self,
         pids: np.ndarray,
         tenants: Union[int, np.ndarray],
         tiers: np.ndarray,
     ) -> None:
-        """Batch registration (the vectorized pool's allocation path).
+        """Batch allocation note (the vectorized pool's path).
 
         ``tenants`` is a scalar tenant id or a per-pid array; ``tiers``
-        is the per-pid tier array ``try_allocate_many`` returned.
+        is the per-pid tier array ``try_allocate_many`` placed.
         """
         pids = np.asarray(pids, np.int64)
         if pids.size == 0:
             return
-        self._ensure_pid_capacity(int(pids.max()))
         t = np.broadcast_to(np.asarray(tenants, np.int64), pids.shape)
+        tracked = t >= 0
+        if not tracked.any():
+            return
+        pids, t = pids[tracked], t[tracked]
+        tiers = np.asarray(tiers)[tracked]
+        self._ensure_pid_capacity(int(pids.max()))
         self._tenant_of_pid[pids] = t
-        fast = np.asarray(tiers) == _FAST
+        fast = tiers == _FAST
         if fast.any():
             self.fast_pages += np.bincount(t[fast], minlength=self.n_tenants)
         if not fast.all():
             self.slow_pages += np.bincount(t[~fast], minlength=self.n_tenants)
 
-    # ---------------------------------------------------------------- #
-    # pool notes (hooked by both engines)
-    # ---------------------------------------------------------------- #
     def note_free(self, pid: int, tier: int) -> None:
         t = self.tenant_of_page(pid)
         if t < 0:
@@ -158,64 +184,69 @@ class TenantAccounting:
 
     def note_demote_many(self, pids: np.ndarray) -> None:
         """Batched :meth:`note_demote` (the vectorized demotion batch)."""
-        pids = np.asarray(pids, np.int64)
-        if pids.size == 0:
+        counts = self._migration_counts(pids)
+        if counts is None:
             return
-        in_range = pids < len(self._tenant_of_pid)
-        t = self._tenant_of_pid[pids[in_range]]
-        t = t[t >= 0]
-        if t.size == 0:
-            return
-        counts = np.bincount(t, minlength=self.n_tenants)
         self.fast_pages -= counts
         self.slow_pages += counts
         self.demoted_total += counts
         self.demoted_interval += counts
 
-    # ---------------------------------------------------------------- #
-    # hotness telemetry
-    # ---------------------------------------------------------------- #
-    def note_access_counts(self, counts: np.ndarray) -> None:
-        """Fold one step's per-tenant access counts into the interval."""
-        self.access_interval += counts
+    def note_promote_many(self, pids: np.ndarray) -> None:
+        """Batched :meth:`note_promote` (the vectorized promotion batch)."""
+        counts = self._migration_counts(pids)
+        if counts is None:
+            return
+        self.slow_pages -= counts
+        self.fast_pages += counts
+        self.promoted_total += counts
+        self.promoted_interval += counts
 
-    def observe_hits(self, pids: np.ndarray) -> None:
-        """Attribute a batch of touched pids to tenants (serving path)."""
+    def _migration_counts(self, pids: np.ndarray) -> Optional[np.ndarray]:
         pids = np.asarray(pids, np.int64)
         if pids.size == 0:
-            return
-        pids = pids[pids < len(self._tenant_of_pid)]
-        t = self._tenant_of_pid[pids]
+            return None
+        t = self._tenants_of(pids)
         t = t[t >= 0]
-        if t.size:
-            self.access_interval += np.bincount(t, minlength=self.n_tenants)
+        if t.size == 0:
+            return None
+        return np.bincount(t, minlength=self.n_tenants)
 
-    def end_interval(self) -> None:
+    # ---------------------------------------------------------------- #
+    # access telemetry
+    # ---------------------------------------------------------------- #
+    def note_access_tiers(
+        self, fast_counts: np.ndarray, slow_counts: np.ndarray
+    ) -> None:
+        """Fold one step's per-tenant access counts (split by tier)."""
+        self.access_fast_interval += fast_counts
+        self.access_slow_interval += slow_counts
+        self.access_interval += fast_counts
+        self.access_interval += slow_counts
+
+    def note_hits(self, fast_pids: np.ndarray, slow_pids: np.ndarray) -> None:
+        """Attribute a step's touched pids to tenants (serving path)."""
+        fast = self._migration_counts(fast_pids)
+        slow = self._migration_counts(slow_pids)
+        zeros = None
+        if fast is None or slow is None:
+            zeros = np.zeros(self.n_tenants, np.int64)
+        if fast is not None or slow is not None:
+            self.note_access_tiers(
+                fast if fast is not None else zeros,
+                slow if slow is not None else zeros,
+            )
+
+    def note_interval(self) -> None:
         """Close an interval: fold access counts into the hotness EWMA."""
         a = self.ewma_alpha
         self.hot_ewma = (1.0 - a) * self.hot_ewma + a * self.access_interval
         self.access_interval[:] = 0
+        self.access_fast_interval[:] = 0
+        self.access_slow_interval[:] = 0
         self.promoted_interval[:] = 0
         self.demoted_interval[:] = 0
         self.intervals += 1
-
-    # ---------------------------------------------------------------- #
-    # neutral arbitration surface (QosArbiter overrides)
-    # ---------------------------------------------------------------- #
-    def order_demotion_victims(self, pids: List[int]) -> List[int]:
-        """Telemetry-only accounting never reorders victims."""
-        return pids
-
-    def admit_promotion(self, pid: int) -> bool:
-        """Telemetry-only accounting never denies a promotion."""
-        return True
-
-    def refund_promotion(self, pid: int) -> None:
-        """Undo an admission whose migration then failed (no-op here)."""
-
-    def qos_summary(self) -> Optional[Dict]:
-        """Arbitration summary — ``None`` for telemetry-only accounting."""
-        return None
 
     # ---------------------------------------------------------------- #
     # introspection

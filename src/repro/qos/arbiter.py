@@ -1,32 +1,46 @@
 """The QoS arbiter: tenant-aware tiering arbitration for both engines.
 
 :class:`QosArbiter` extends the telemetry ledger
-(:class:`~repro.qos.accounting.TenantAccounting`) with the two
-arbitration hooks both page pools consult when ``pool.qos`` is set:
+(:class:`~repro.qos.accounting.TenantAccounting`) into a full
+:class:`~repro.core.control.TieringControl`: it implements all three
+decision points both page pools dispatch through ``pool.control``:
 
+* **allocation steering** (§5.4 generalized) — new pages of an
+  over-quota tenant are steered slow-first at allocation time, so a
+  churny neighbor stops carving fast-tier headroom out of everyone
+  else's quota before demotion even has to run.  Steered placements
+  count as ``pgalloc_steered``; the pool still enforces watermarks, so
+  steering can never violate them.
 * **demotion victim ordering** — reclaim candidates from over-quota
   tenants demote first (a stable partition of the pool's candidate
   list, so the LRU/frequency order within each group is preserved and
   both engines see the same sequence);
-* **promotion admission** — a promotion is admitted only while the
-  tenant is under its fast-tier quota (+ slack) *and* its token bucket
-  has a token (refilled per interval proportionally to priority
-  weight).  Denied promotions count as ``pgpromote_fail_qos`` /
-  ``PromoteFail.QOS`` — a latency-critical stream can never be starved
-  of migration bandwidth by a churny batch neighbor.
+* **promotion admission** — batched: one
+  :meth:`~QosArbiter.admit_promotions` call admits a whole candidate
+  batch, exactly equivalent to asking per-pid in order (intra-batch
+  token consumption and provisional residency are modeled closed-form
+  per tenant).  A promotion is admitted only while the tenant is under
+  its fast-tier quota (+ slack) *and* its token bucket has a token
+  (refilled per interval proportionally to priority weight).  Denials
+  count as ``pgpromote_fail_qos`` / ``PromoteFail.QOS`` — a
+  latency-critical stream can never be starved of migration bandwidth
+  by a churny batch neighbor.
 
 Every decision is a pure function of counters that are bit-identical
 across the reference and vectorized engines, so placement under QoS is
-too (tests/test_qos.py enforces it); with ``pool.qos = None`` both
-engines are bit-identical to the pre-QoS output.
+too (tests/test_qos.py enforces it); with a ``NullControl`` both
+engines are bit-identical to the control-free output.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.control import AllocRequest
+from repro.core.types import Tier
 from repro.qos.accounting import TenantAccounting
 from repro.qos.quota import (
     QosConfig,
@@ -102,16 +116,42 @@ class QosArbiter(TenantAccounting):
             self.tokens = np.minimum(self.tokens, self._burst)
 
     # ---------------------------------------------------------------- #
-    # arbitration hooks (consulted by both pools)
+    # decision point: allocation steering (§5.4 tenant-aware)
+    # ---------------------------------------------------------------- #
+    @property
+    def steers_allocation(self) -> bool:  # type: ignore[override]
+        return self.config.steer_allocation
+
+    def _over_quota(self, tenant: int) -> bool:
+        return bool(
+            self.fast_pages[tenant]
+            > self.quota[tenant] + self.config.quota_slack
+        )
+
+    def steer_allocation(self, req: AllocRequest) -> Tier:
+        """Over-quota tenants' new pages go slow-first.
+
+        Caller-forced placements (``prefer``), untracked tenants and
+        **pinned** pages keep the pool's default — a pinned page can
+        never migrate, so steering it slow would strand it there long
+        after the tenant drops back under quota.  The pool's watermark
+        machinery still applies to whatever is returned.
+        """
+        if (req.prefer is None and not req.pinned
+                and 0 <= req.tenant < self.n_tenants
+                and self._over_quota(req.tenant)):
+            return Tier.SLOW
+        return req.default
+
+    # ---------------------------------------------------------------- #
+    # decision point: demotion victim ordering
     # ---------------------------------------------------------------- #
     def order_demotion_victims(self, pids: List[int]) -> List[int]:
         """Stable partition: pages of over-quota tenants demote first."""
         if len(pids) < 2:
             return pids
         arr = np.asarray(pids, np.int64)
-        in_range = arr < len(self._tenant_of_pid)
-        t = np.where(in_range, self._tenant_of_pid[np.minimum(
-            arr, len(self._tenant_of_pid) - 1)], -1)
+        t = self._tenants_of(arr)
         over = np.zeros(len(arr), bool)
         known = t >= 0
         if known.any():
@@ -123,8 +163,53 @@ class QosArbiter(TenantAccounting):
         return [p for p, o in zip(pids, over) if o] + \
                [p for p, o in zip(pids, over) if not o]
 
-    def admit_promotion(self, pid: int) -> bool:
-        """Quota + token-bucket gate on the promotion path."""
+    # ---------------------------------------------------------------- #
+    # decision point: promotion admission (batched)
+    # ---------------------------------------------------------------- #
+    def admit_promotions(self, pids: Sequence[int]) -> np.ndarray:
+        """Quota + token-bucket gate over a promotion candidate batch.
+
+        Exactly equivalent to admitting per pid in order under the
+        assumption that every admitted candidate's migration succeeds
+        (the pools' batch path guarantees a free fast frame per
+        candidate before calling).  Within the batch each admission
+        provisionally raises its tenant's residency and consumes a
+        token, so the per-tenant admitted count is the closed form
+        ``min(candidates, quota room, floor(tokens))`` — whole-integer
+        token subtraction is exact in float64, keeping the result
+        bit-identical to the scalar sequence.
+        """
+        n = len(pids)
+        if n == 1:
+            return np.asarray([self._admit_one(int(pids[0]))])
+        arr = np.asarray(pids, np.int64)
+        tenants = self._tenants_of(arr)
+        mask = np.ones(n, bool)
+        slack = self.config.quota_slack
+        for t in np.unique(tenants):
+            t = int(t)
+            if t < 0:
+                continue  # untracked pages are outside arbitration
+            idx = np.flatnonzero(tenants == t)
+            n_t = len(idx)
+            room = float(self.quota[t]) + slack - float(self.fast_pages[t])
+            q_admits = max(0, math.ceil(room))
+            tok = float(self.tokens[t])
+            t_admits = int(tok) if tok >= 1.0 else 0
+            admits = min(n_t, q_admits, t_admits)
+            if admits < n_t:
+                # all remaining denials fail the same (first) check the
+                # scalar sequence would: quota before tokens
+                if q_admits <= admits:
+                    self.denied_quota[t] += n_t - admits
+                else:
+                    self.denied_token[t] += n_t - admits
+                mask[idx[admits:]] = False
+            if admits:
+                self.tokens[t] -= float(admits)
+        return mask
+
+    def _admit_one(self, pid: int) -> bool:
         t = self.tenant_of_page(pid)
         if t < 0:
             return True  # untracked pages are outside arbitration
@@ -146,14 +231,36 @@ class QosArbiter(TenantAccounting):
             self.tokens[t] = min(self.tokens[t] + 1.0, self._burst[t])
 
     # ---------------------------------------------------------------- #
+    # serving signal: batch-class admission shedding
+    # ---------------------------------------------------------------- #
+    def shed_batch_request(self, pool) -> bool:
+        """Shed a batch-class admission while the fast tier is under
+        reclaim pressure *and* the arbiter is actively holding some
+        tenant over quota — admitting more batch load at that point
+        thrashes the fast tier the higher classes are being protected
+        into.
+
+        Pressure is ``free <= wm_demote`` (not the strict background
+        trigger): steady-state reclaim parks free frames exactly *at*
+        the demote watermark, and a fully-subscribed fast tier plus an
+        over-quota tenant is precisely when new batch pages would evict
+        protected residency.
+        """
+        if pool.free_frames(Tier.FAST) > pool.wm_demote:
+            return False
+        return bool(
+            (self.fast_pages > self.quota + self.config.quota_slack).any()
+        )
+
+    # ---------------------------------------------------------------- #
     # interval close: violations, dynamic re-division, token refill
     # ---------------------------------------------------------------- #
-    def end_interval(self) -> None:
+    def note_interval(self) -> None:
         over = self.fast_pages > self.quota + self.config.quota_slack
         if over.any():
             self.quota_violation_intervals += 1
             self.violations_by_tenant += over
-        super().end_interval()  # folds access counts into the EWMA
+        super().note_interval()  # folds access counts into the EWMA
         if self.config.mode == "dynamic":
             self.quota = dynamic_quotas(
                 self.config, self.weights, self.hot_ewma, self.fast_frames

@@ -56,6 +56,10 @@ class QosConfig:
       renormalized away from the other tenants).
     * ``quota_slack`` — frames a tenant may exceed its quota by before
       promotion admission denies it and demotion targets it first.
+    * ``steer_allocation`` — steer over-quota tenants' *new* pages
+      slow-first at allocation time (§5.4 generalized tenant-aware;
+      counted as ``pgalloc_steered``).  Off restores PR-3-style
+      demotion/promotion-only arbitration.
     * ``promote_tokens_per_interval`` — total promotion tokens minted
       per interval, split across tenants by priority weight (the
       per-tenant token-bucket refill).
@@ -72,6 +76,7 @@ class QosConfig:
     ewma_alpha: float = 0.3
     min_share: float = 0.05
     quota_slack: int = 0
+    steer_allocation: bool = True
     promote_tokens_per_interval: float = 64.0
     token_burst: float = 2.0
 

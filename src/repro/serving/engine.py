@@ -47,7 +47,7 @@ import numpy as np
 
 from repro.core import PageType, Tier, TppConfig, make_policy
 from repro.kernels import ops as kernel_ops
-from repro.qos import QosArbiter, QosConfig
+from repro.qos import make_control
 from repro.kernels.paged_attention import PAD_PAGE_POS
 from repro.models import nn
 from repro.models.attention import AttnConfig, make_cos_sin, _rotate
@@ -58,7 +58,17 @@ from repro.serving.kv_cache import KVCacheConfig, TieredKVCache, bucket as _buck
 
 
 class AdmissionError(RuntimeError):
-    """Raised when ``add_request`` would exceed ``EngineConfig.max_seqs``."""
+    """Raised when ``add_request`` refuses a request.
+
+    ``reason`` distinguishes the cause: ``"max_seqs"`` (engine at its
+    sequence cap — finish one first) vs ``"qos_pressure"`` (the tiering
+    control plane is shedding batch-class load while the fast tier is
+    under reclaim pressure; retry later or upgrade the class).
+    """
+
+    def __init__(self, message: str, reason: str = "max_seqs") -> None:
+        super().__init__(message)
+        self.reason = reason
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,11 +82,15 @@ class EngineConfig:
     tpp: TppConfig = dataclasses.field(default_factory=TppConfig)
     max_seqs: int = 8
     data_plane: str = "reference"  # "reference" | "batched"
-    # Multi-tenant QoS (repro.qos): a QosConfig arms the arbiter on the
-    # KV pool; requests are tagged with a tenant id + priority class
-    # (``add_request``), defaulting to ``qos_class``.
-    qos: Optional[QosConfig] = None
+    # Multi-tenant QoS (repro.qos): a QosConfig arms the arbiter — or a
+    # SlowdownControllerConfig the SLO feedback controller — as the KV
+    # pool's TieringControl; requests are tagged with a tenant id +
+    # priority class (``add_request``), defaulting to ``qos_class``.
+    qos: Optional[Any] = None
     qos_class: str = "standard"
+    # Shed batch-class admissions while the control plane reports
+    # fast-tier pressure (``TieringControl.shed_batch_request``).
+    admission_control: bool = True
 
 
 @dataclasses.dataclass
@@ -159,12 +173,14 @@ class ServingEngine:
             ),
             tpp=engine.tpp,
         )
-        self.qos: Optional[QosArbiter] = None
+        # Any TieringControl (QosArbiter, SlowdownController, or a
+        # telemetry-only TenantAccounting) — built via make_control.
+        self.control = None
         if engine.qos is not None:
-            self.qos = QosArbiter(
-                n_tenants=1, fast_frames=engine.num_fast, config=engine.qos
+            self.control = make_control(
+                engine.qos, n_tenants=1, fast_frames=engine.num_fast
             )
-            self.kv.pool.qos = self.qos
+            self.kv.pool.control = self.control
         self.policy = make_policy(engine.policy, self.kv.pool, seed=seed)
         self.seqs: Dict[int, _Seq] = {}
         self.requests: Dict[int, Request] = {}
@@ -213,16 +229,31 @@ class ServingEngine:
         stream of batch jobs can share one tenant id); ``qos_class``
         sets that tenant's priority class (default
         ``EngineConfig.qos_class``).  Ignored when QoS is off.
+
+        With QoS armed, batch-class requests are **shed** (AdmissionError
+        ``reason="qos_pressure"``) while the control plane reports
+        fast-tier pressure — load drops before the fast tier thrashes
+        the latency-critical tenants it is protecting.
         """
         if len(self.seqs) >= self.ecfg.max_seqs:
             raise AdmissionError(
                 f"engine at max_seqs={self.ecfg.max_seqs}; finish() a "
-                "sequence before admitting another"
+                "sequence before admitting another",
+                reason="max_seqs",
             )
-        if self.qos is not None:
+        if self.control is not None:
+            cls = qos_class or self.ecfg.qos_class
+            if (self.ecfg.admission_control and cls == "batch"
+                    and self.control.shed_batch_request(self.kv.pool)):
+                raise AdmissionError(
+                    "batch-class request shed: fast tier under reclaim "
+                    "pressure with tenants over quota (control-plane "
+                    "admission gate)",
+                    reason="qos_pressure",
+                )
             # validate/assign the class before any engine state mutates,
             # so a bad qos_class can't leave a zombie sequence behind
-            self.qos.configure_tenant(tenant, qos_class or self.ecfg.qos_class)
+            self.control.configure_tenant(tenant, cls)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
@@ -426,18 +457,19 @@ class ServingEngine:
             req.out.append(tok)
             if len(req.out) >= req.max_new:
                 req.done = True
-        if self.qos is not None:
-            # per-tenant hotness telemetry for the dynamic quota mode
-            hits = slow_hits + fast_hits
-            self.qos.observe_hits(np.fromiter(hits, np.int64, count=len(hits)))
+        if self.control is not None:
+            # per-tenant hotness + slowdown telemetry (tier-split feeds
+            # the slowdown controller's measured per-tenant slowdown)
+            self.control.note_hits(
+                np.fromiter(fast_hits, np.int64, count=len(fast_hits)),
+                np.fromiter(slow_hits, np.int64, count=len(slow_hits)),
+            )
         # Uniform PlacementPolicy protocol: every policy receives both hit
         # streams (NUMA balancing samples fast hits; the rest ignore them).
         self.policy.step(slow_hits, fast_hits)
         self.steps += 1
         if self.steps % 4 == 0:
-            self.kv.pool.end_interval()
-            if self.qos is not None:
-                self.qos.end_interval()
+            self.kv.pool.end_interval()  # also ticks control.note_interval
         return out
 
     # ------------------------- reference plane ---------------------- #
@@ -736,6 +768,6 @@ class ServingEngine:
             "fast_free": self.kv.pool.free_frames(Tier.FAST),
             "slow_used": self.kv.pool.used_frames(Tier.SLOW),
         }
-        if self.qos is not None:
-            out["qos"] = self.qos.qos_summary()
+        if self.control is not None:
+            out["qos"] = self.control.qos_summary()
         return out

@@ -50,7 +50,16 @@ class ExpertTierManager:
         cfg: ExpertTierConfig,
         expert_weights: Dict[str, np.ndarray],  # each (L, E, ...) stacked
         seed: int = 0,
+        control=None,
+        tenant_of_expert=None,
     ) -> None:
+        """``control`` attaches a :class:`~repro.core.control.
+        TieringControl` (e.g. a ``TenantAccounting`` or ``QosArbiter``)
+        to the expert pool; ``tenant_of_expert(layer, expert) -> int``
+        attributes each shared-expert frame to a tenant (default: all
+        tenant 0), so expert residency/hotness lands in the same
+        per-tenant ledger the KV tiers use (ROADMAP "expert tiering
+        under QoS")."""
         self.cfg = cfg
         L, E = cfg.n_layers, cfg.n_experts
         total = L * E
@@ -66,19 +75,29 @@ class ExpertTierManager:
         self.pool = PagePool(
             cfg.fast_capacity, total, config=cfg.tpp, on_migrate=self._do_migrate
         )
+        self._control = control
+        if control is not None:
+            self.pool.control = control
+        self._tenant_of_expert = tenant_of_expert or (lambda l, e: 0)
         self.policy = make_policy(cfg.policy, self.pool, seed=seed)
         # page id per (layer, expert) — allocate all as FILE on slow first
         # (experts are bulky long-lived parameters), then let traffic
         # promote the hot ones: the §5.4 type-aware starting point.
         self.pid_of: Dict[Tuple[int, int], int] = {}
         for le in range(total):
-            page = self.pool.allocate(PageType.FILE, prefer=Tier.SLOW)
-            self.pid_of[(le // E, le % E)] = page.pid
+            l, e = le // E, le % E
+            page = self.pool.allocate(
+                PageType.FILE, prefer=Tier.SLOW,
+                tenant=self._tenant_of_expert(l, e) if control is not None
+                else -1,
+            )
+            self.pid_of[(l, e)] = page.pid
             # slow frame must equal its bank row: allocation order gives
             # frame == le because the slow free-list pops ascending
             assert page.tier == Tier.SLOW and page.frame == le, (page.tier, page.frame, le)
         self.hbm_hits = 0
         self.host_hits = 0
+        self.steps = 0
 
     # ---------------------------------------------------------------- #
     def _do_migrate(self, pid, src, src_frame, dst, dst_frame) -> None:
@@ -109,6 +128,15 @@ class ExpertTierManager:
             (slow_hits if tier == Tier.SLOW else fast_hits).append(pid)
         # Uniform PlacementPolicy protocol — no per-policy special cases.
         self.policy.step(slow_hits, fast_hits)
+        self.steps += 1
+        if self._control is not None:
+            # per-tenant hotness telemetry; interval ticks stay with the
+            # caller (``mgr.pool.end_interval()``), same convention as
+            # the simulator and benchmarks
+            self._control.note_hits(
+                np.fromiter(fast_hits, np.int64, count=len(fast_hits)),
+                np.fromiter(slow_hits, np.int64, count=len(slow_hits)),
+            )
 
     # ---------------------------------------------------------------- #
     def modeled_cost(self) -> float:

@@ -264,11 +264,12 @@ class TieredKVCache:
         self, page_type: PageType = PageType.ANON,
         tenant: Optional[int] = None,
     ) -> int:
-        """Allocate a KV page; ``tenant`` tags the frame for the QoS
-        arbiter (per-tenant residency/hotness attribution)."""
-        page = self.pool.allocate(page_type)
-        if tenant is not None and self.pool.qos is not None:
-            self.pool.qos.register_page(page.pid, tenant, int(page.tier))
+        """Allocate a KV page; ``tenant`` tags the frame for the tiering
+        control plane (per-tenant residency/hotness attribution, and
+        tenant-aware allocation steering when an arbiter is attached)."""
+        page = self.pool.allocate(
+            page_type, tenant=-1 if tenant is None else tenant
+        )
         # The claimed frame may still source a staged copy (it was freed
         # by a not-yet-flushed demotion): settle before anyone writes it.
         self._flush_if_touches(self._global(page.tier, page.frame))

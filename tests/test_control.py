@@ -1,0 +1,209 @@
+"""The TieringControl decision surface (repro.core.control).
+
+Pins the contract the pools rely on:
+
+* **NullControl neutrality** — a pool with the default ``NULL_CONTROL``
+  is bit-identical to the historical control-free pool on every path
+  (allocation order, promotion loop, vmstat trajectory), for both
+  engines.
+* **decision-point invariants** — steering falls back through the
+  watermark machinery (never violates it), ``order_demotion_victims``
+  only reorders, ``admit_promotions`` masks are input-length.
+* **batched promotion** — ``promote_pages`` (the batched promote path
+  the TPP loop uses) is exactly equivalent to per-pid ``promote_page``
+  calls, with and without an arbiter attached, across both engines.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    NULL_CONTROL,
+    AllocRequest,
+    NullControl,
+    PagePool,
+    PageType,
+    TieringControl,
+    Tier,
+    TppConfig,
+    VectorPagePool,
+)
+from repro.qos import QosArbiter, QosConfig
+
+POOLS = (PagePool, VectorPagePool)
+
+
+# --------------------------------------------------------------------- #
+# the neutral control
+# --------------------------------------------------------------------- #
+def test_null_control_defaults():
+    ctl = NullControl()
+    req = AllocRequest(page_type=PageType.FILE, default=Tier.SLOW)
+    assert ctl.steer_allocation(req) == Tier.SLOW
+    assert not ctl.steers_allocation
+    assert ctl.order_demotion_victims([3, 1, 2]) == [3, 1, 2]
+    assert list(ctl.admit_promotions((7,))) == [True]
+    assert list(ctl.admit_promotions([1, 2, 3])) == [True, True, True]
+    assert ctl.qos_summary() is None
+    assert not ctl.shed_batch_request(pool=None)
+    assert isinstance(NULL_CONTROL, TieringControl)
+
+
+@pytest.mark.parametrize("pool_cls", POOLS)
+def test_default_pool_control_is_shared_null(pool_cls):
+    pool = pool_cls(8, 8)
+    assert pool.control is NULL_CONTROL
+    # lifecycle notes on the null control are no-ops end to end
+    p = pool.allocate(PageType.ANON)
+    pool.demote_page(p.pid)
+    pool.promote_page(p.pid)
+    pool.free(p.pid)
+    pool.end_interval()
+    assert pool.vmstat.pgalloc_steered == 0
+
+
+# --------------------------------------------------------------------- #
+# steering never violates watermarks
+# --------------------------------------------------------------------- #
+class _SteerEverything(TieringControl):
+    """Pathological control: steers every allocation to one tier."""
+
+    steers_allocation = True
+
+    def __init__(self, tier):
+        self.tier = tier
+
+    def steer_allocation(self, req):
+        return self.tier
+
+
+@pytest.mark.parametrize("pool_cls", POOLS)
+def test_steering_respects_watermarks(pool_cls):
+    pool = pool_cls(8, 4)
+    pool.control = _SteerEverything(Tier.SLOW)
+    tiers = [pool.allocate(PageType.ANON).tier for _ in range(10)]
+    # slow fills (4 frames), then steering overflows back to fast — the
+    # pool's placement loop, not the control, owns the fallback
+    assert tiers[:4] == [Tier.SLOW] * 4
+    assert all(t == Tier.FAST for t in tiers[4:])
+    assert pool.vmstat.pgalloc_steered == 10
+
+    pool2 = pool_cls(8, 4)
+    pool2.control = _SteerEverything(Tier.FAST)
+    # FAST steering still respects wm_min: the reserve frames overflow
+    # to slow exactly like default fast-first allocation
+    tiers2 = [pool2.allocate(PageType.FILE).tier for _ in range(9)]
+    assert tiers2.count(Tier.SLOW) == pool2.wm_min + 1
+    pool2.check_invariants()
+
+
+@pytest.mark.parametrize("pool_cls", POOLS)
+def test_steered_vectorized_alloc_matches_reference_order(pool_cls):
+    """With a steering control attached the batch allocator must defer
+    to the scalar path (per-allocation sequencing)."""
+    pool = pool_cls(8, 8)
+    pool.control = _SteerEverything(Tier.SLOW)
+    if pool_cls is VectorPagePool:
+        assert pool.try_allocate_many(PageType.ANON, 4) is None
+
+
+# --------------------------------------------------------------------- #
+# batched promotion == scalar promotion
+# --------------------------------------------------------------------- #
+def _filled_pools(pool_cls, qos=None, n_slow_pages=24, n_fast_pages=4):
+    pool = pool_cls(64, 64)
+    if qos is not None:
+        arb = QosArbiter(2, fast_frames=64, config=qos)
+        pool.control = arb
+    slow_pids = []
+    for i in range(n_slow_pages):
+        p = pool.allocate(PageType.ANON if i % 3 else PageType.FILE,
+                          prefer=Tier.SLOW, tenant=i % 2)
+        slow_pids.append(p.pid)
+    for i in range(n_fast_pages):
+        pool.allocate(PageType.ANON, prefer=Tier.FAST, tenant=i % 2)
+    return pool, slow_pids
+
+
+@pytest.mark.parametrize("qos", (
+    None,
+    QosConfig(mode="static", promote_tokens_per_interval=8.0,
+              token_burst=1.0),
+))
+def test_promote_pages_matches_scalar_sequence(qos):
+    """Batched promote_pages == per-pid promote_page, across engines and
+    with/without an arbiter (mixed page types, QoS denials included)."""
+    results = {}
+    for pool_cls in POOLS:
+        batch_pool, pids = _filled_pools(pool_cls, qos)
+        n_ok_b, n_fail_b = batch_pool.promote_pages(pids)
+        seq_pool, pids2 = _filled_pools(pool_cls, qos)
+        from repro.core.page_pool import promote_pages_sequential
+
+        n_ok_s, n_fail_s = promote_pages_sequential(seq_pool, pids2)
+        assert (n_ok_b, n_fail_b) == (n_ok_s, n_fail_s)
+        assert batch_pool.vmstat.as_dict() == seq_pool.vmstat.as_dict()
+        assert (batch_pool.pages_in_tier(Tier.FAST)
+                == seq_pool.pages_in_tier(Tier.FAST))
+        batch_pool.check_invariants()
+        results[pool_cls.__name__] = batch_pool.vmstat.as_dict()
+    # and the two engines agree with each other
+    assert results["PagePool"] == results["VectorPagePool"]
+
+
+def test_promote_pages_falls_back_under_frame_exhaustion():
+    """Fewer free fast frames than candidates → exact per-pid sequence
+    (TARGET_LOW_MEM for the tail) on both engines."""
+    for pool_cls in POOLS:
+        pool = pool_cls(4, 32)
+        pids = [pool.allocate(PageType.ANON, prefer=Tier.SLOW).pid
+                for _ in range(8)]
+        n_ok, n_fail = pool.promote_pages(pids)
+        assert n_ok == 4 and n_fail == 4
+        assert pool.vmstat.pgpromote_fail_low_mem == 4
+        pool.check_invariants()
+
+
+def test_promote_pages_pinned_falls_back():
+    for pool_cls in POOLS:
+        pool = pool_cls(16, 32)
+        ok_pid = pool.allocate(PageType.ANON, prefer=Tier.SLOW).pid
+        pinned = pool.allocate(PageType.ANON, prefer=Tier.SLOW,
+                               pinned=True).pid
+        n_ok, n_fail = pool.promote_pages([ok_pid, pinned])
+        assert (n_ok, n_fail) == (1, 1)
+        assert pool.vmstat.pgpromote_fail_pinned == 1
+
+
+# --------------------------------------------------------------------- #
+# admission mask invariants
+# --------------------------------------------------------------------- #
+def test_admit_promotions_mask_length_matches_input():
+    arb = QosArbiter(2, fast_frames=16,
+                     config=QosConfig(mode="static",
+                                      promote_tokens_per_interval=2.0))
+    pool = PagePool(16, 64)
+    pool.control = arb
+    pids = [pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=0).pid
+            for _ in range(6)]
+    for batch in ([pids[0]], pids[:3], pids):
+        mask = arb.admit_promotions(np.asarray(batch))
+        assert len(mask) == len(batch)
+
+
+# --------------------------------------------------------------------- #
+# interval tick flows pool -> control
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("pool_cls", POOLS)
+def test_end_interval_ticks_control(pool_cls):
+    class Ticker(TieringControl):
+        ticks = 0
+
+        def note_interval(self):
+            self.ticks += 1
+
+    pool = pool_cls(8, 8)
+    pool.control = Ticker()
+    pool.end_interval()
+    pool.end_interval()
+    assert pool.control.ticks == 2

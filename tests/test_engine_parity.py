@@ -122,6 +122,62 @@ def test_parity_coupled_ablation_and_sampling():
 
 
 # --------------------------------------------------------------------- #
+# parity across the TieringControl decision surface
+# --------------------------------------------------------------------- #
+def run_both_qos(qos, policy="tpp"):
+    out = {}
+    for engine in ("reference", "vectorized"):
+        sim = TieredSimulator(
+            "web+cache1+data_warehouse", policy, 300, 1200, seed=7,
+            trace=make_trace("web+cache1+data_warehouse", seed=7,
+                             total_pages=800),
+            engine=engine, qos=qos,
+        )
+        out[engine] = sim.run(40, measure_from=10)
+    return out["reference"], out["vectorized"]
+
+
+def test_parity_null_control():
+    """Single-tenant runs carry the NULL_CONTROL singleton end to end."""
+    from repro.core import NULL_CONTROL
+
+    for engine in ("reference", "vectorized"):
+        sim = TieredSimulator(
+            "cache1", "tpp", 96, 512, seed=7,
+            trace=make_trace("cache1", seed=7, total_pages=400),
+            engine=engine,
+        )
+        assert sim.pool.control is NULL_CONTROL
+    ref, vec = run_both("cache1", "tpp", 96, 512, total=400)
+    assert_parity(ref, vec)
+    assert ref.vmstat.pgalloc_steered == 0
+
+
+def test_parity_arbiter_with_allocation_steering():
+    from repro.qos import QosConfig
+
+    qos = QosConfig(mode="dynamic",
+                    classes=("latency_critical", "standard", "batch"))
+    ref, vec = run_both_qos(qos)
+    assert_parity(ref, vec)
+    assert ref.vmstat.pgalloc_steered > 0  # steering exercised
+    assert ref.qos == vec.qos
+
+
+def test_parity_slowdown_controller():
+    from repro.qos import QosConfig, SlowdownControllerConfig
+
+    ctrl = SlowdownControllerConfig(
+        qos=QosConfig(classes=("latency_critical", "standard", "batch")),
+    )
+    ref, vec = run_both_qos(ctrl)
+    assert_parity(ref, vec)
+    assert ref.qos["mode"] == "slowdown_controller"
+    assert ref.qos["shares"] == vec.qos["shares"]
+    assert ref.qos["slowdown_ewma"] == vec.qos["slowdown_ewma"]
+
+
+# --------------------------------------------------------------------- #
 # pool-level parity of the batched primitives
 # --------------------------------------------------------------------- #
 @pytest.mark.parametrize("file_to_slow", [False, True])

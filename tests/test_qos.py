@@ -1,19 +1,25 @@
-"""Multi-tenant QoS subsystem tests (repro.qos).
+"""Multi-tenant QoS subsystem tests (repro.qos on the TieringControl API).
 
 Covers the acceptance surface of the QoS control plane:
 
 * **engine parity** — reference and vectorized engines produce
   bit-identical placement and per-tenant counters on the ``web+cache1``
-  and ``web+cache1+data_warehouse`` mixes, with and without the QoS
-  arbiter; telemetry-only accounting (QoS off) is placement-neutral,
-  i.e. bit-identical to a fully detached pool.
+  and ``web+cache1+data_warehouse`` mixes under (a) no control /
+  telemetry-only accounting, (b) the QoS arbiter with allocation
+  steering on and off, (c) the slowdown controller; telemetry-only
+  accounting (QoS off) is placement-neutral, i.e. bit-identical to a
+  fully detached pool.
 * **per-tenant attribution** — promote/demote (and access/alloc)
   counters sum to the global ``VmStat``.
 * **arbitration mechanics** — quota caps and token buckets deny
-  promotions (``pgpromote_fail_qos``), over-quota tenants demote first,
-  the residency ledger matches the pool, dynamic quotas track hotness.
+  promotions (``pgpromote_fail_qos``), batched admission ==
+  scalar-sequence admission, over-quota tenants demote first *and*
+  allocate slow-first (``pgalloc_steered``), the residency ledger
+  matches the pool, dynamic quotas track hotness.
+* **slowdown controller** — shares move toward per-class SLO targets
+  and per-tenant measured slowdowns converge.
 * **fairness metrics** — per-tenant modeled slowdown and Jain's index.
-* **serving integration** — per-request tenant/class tagging, arbiter
+* **serving integration** — per-request tenant/class tagging, control
   consulted by the KV pool, data-plane parity under QoS, and the
   noisy-neighbor protection effect end to end.
 """
@@ -22,6 +28,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    NULL_CONTROL,
     PagePool,
     PageType,
     TieredSimulator,
@@ -30,22 +37,35 @@ from repro.core import (
     VectorPagePool,
     make_trace,
 )
-from repro.qos import QosArbiter, QosConfig, TenantAccounting
+from repro.qos import (
+    QosArbiter,
+    QosConfig,
+    SlowdownController,
+    SlowdownControllerConfig,
+    TenantAccounting,
+)
 
 MIXES = ("web+cache1", "web+cache1+data_warehouse")
 QOS3 = QosConfig(mode="dynamic",
                  classes=("latency_critical", "standard", "batch"))
+QOS3_NOSTEER = QosConfig(mode="dynamic",
+                         classes=("latency_critical", "standard", "batch"),
+                         steer_allocation=False)
+CTRL3 = SlowdownControllerConfig(
+    qos=QosConfig(classes=("latency_critical", "standard", "batch")),
+)
 
 
 def run_sim(workload, engine, qos=None, policy="tpp", fast=300, slow=1200,
-            steps=40, total=800, seed=7, detach_qos=False):
+            steps=40, total=800, seed=7, detach_control=False):
     sim = TieredSimulator(
         workload, policy, fast, slow, seed=seed,
         trace=make_trace(workload, seed=seed, total_pages=total),
         engine=engine, qos=qos,
     )
-    if detach_qos:
-        sim.pool.qos = None
+    if detach_control:
+        sim.control = None
+        sim.pool.control = NULL_CONTROL
     return sim.run(steps, measure_from=10)
 
 
@@ -66,6 +86,25 @@ def test_parity_with_qos_enabled(mix):
     vec = run_sim(mix, "vectorized", qos=QOS3)
     assert_parity(ref, vec)
     assert ref.qos is not None and ref.qos["mode"] == "dynamic"
+    # allocation steering was actually exercised on the contended mix
+    assert ref.vmstat.pgalloc_steered > 0
+
+
+@pytest.mark.parametrize("mix", MIXES)
+def test_parity_with_steering_disabled(mix):
+    ref = run_sim(mix, "reference", qos=QOS3_NOSTEER)
+    vec = run_sim(mix, "vectorized", qos=QOS3_NOSTEER)
+    assert_parity(ref, vec)
+    assert ref.vmstat.pgalloc_steered == 0
+
+
+@pytest.mark.parametrize("mix", MIXES)
+def test_parity_with_slowdown_controller(mix):
+    ref = run_sim(mix, "reference", qos=CTRL3)
+    vec = run_sim(mix, "vectorized", qos=CTRL3)
+    assert_parity(ref, vec)
+    assert ref.qos["mode"] == "slowdown_controller"
+    assert len(ref.qos["shares"]) == len(mix.split("+"))
 
 
 @pytest.mark.parametrize("mix", MIXES)
@@ -78,7 +117,7 @@ def test_parity_with_qos_disabled(mix):
 
 @pytest.mark.parametrize("policy", ("numa_balancing", "autotiering"))
 def test_parity_with_qos_other_policies(policy):
-    """The arbiter hooks the pool, so every policy is covered."""
+    """The control hooks the pool, so every policy is covered."""
     ref = run_sim("web+cache1", "reference", qos=QOS3, policy=policy)
     vec = run_sim("web+cache1", "vectorized", qos=QOS3, policy=policy)
     assert_parity(ref, vec)
@@ -88,17 +127,28 @@ def test_parity_with_qos_other_policies(policy):
 def test_qos_off_is_bit_identical_to_detached_pool(engine):
     """Telemetry-only accounting never changes placement decisions."""
     with_acc = run_sim("web+cache1", engine)
-    without = run_sim("web+cache1", engine, detach_qos=True)
+    without = run_sim("web+cache1", engine, detach_control=True)
     assert with_acc.vmstat.as_dict() == without.vmstat.as_dict()
     assert with_acc.local_fraction == without.local_fraction
     assert with_acc.promote_rate == without.promote_rate
     assert with_acc.demote_rate == without.demote_rate
 
 
+def test_pool_qos_attribute_is_gone():
+    """The PR-3 ``pool.qos`` duck-typed hook no longer exists: the only
+    control surface is ``pool.control`` (a TieringControl)."""
+    from repro.core import TieringControl
+
+    for pool in (PagePool(8, 8), VectorPagePool(8, 8)):
+        assert not hasattr(pool, "qos")
+        assert isinstance(pool.control, TieringControl)
+        assert pool.control is NULL_CONTROL  # shared neutral singleton
+
+
 # --------------------------------------------------------------------- #
 # per-tenant attribution (satellite: counters sum to the global VmStat)
 # --------------------------------------------------------------------- #
-@pytest.mark.parametrize("qos", (None, QOS3))
+@pytest.mark.parametrize("qos", (None, QOS3, CTRL3))
 def test_per_tenant_counters_sum_to_vmstat(qos):
     for engine in ("reference", "vectorized"):
         r = run_sim("web+cache1+data_warehouse", engine, qos=qos)
@@ -125,16 +175,17 @@ def test_accounting_residency_matches_pool():
             engine=engine, qos=QOS3,
         )
         sim.run(30)
-        sim.pool.qos.check_consistency(sim.pool)
+        sim.control.check_consistency(sim.pool)
+        assert sim.pool.control is sim.control
 
 
 # --------------------------------------------------------------------- #
 # arbitration mechanics (pool-level units)
 # --------------------------------------------------------------------- #
-def _pool_with_arbiter(pool_cls, config):
-    pool = pool_cls(64, 64)
-    arb = QosArbiter(2, fast_frames=64, config=config)
-    pool.qos = arb
+def _pool_with_arbiter(pool_cls, config, n_tenants=2, frames=64):
+    pool = pool_cls(frames, frames)
+    arb = QosArbiter(n_tenants, fast_frames=frames, config=config)
+    pool.control = arb
     return pool, arb
 
 
@@ -144,17 +195,15 @@ def test_quota_cap_denies_promotion(pool_cls):
                     promote_tokens_per_interval=1000.0)
     pool, arb = _pool_with_arbiter(pool_cls, cfg)
     # tenant 0 far over its 32-frame quota; tenant 1 well under
-    pids0 = [pool.allocate(PageType.ANON).pid for _ in range(40)]
-    arb.register_pages(np.asarray(pids0), 0, np.zeros(40, np.int8))
-    p_slow = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
-    arb.register_page(p_slow.pid, 0, int(Tier.SLOW))
+    for _ in range(40):
+        pool.allocate(PageType.ANON, prefer=Tier.FAST, tenant=0)
+    p_slow = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=0)
     res = pool.promote_page(p_slow.pid)
     assert res.name == "QOS"
     assert pool.vmstat.pgpromote_fail_qos == 1
     assert arb.denied_quota[0] == 1
     # an under-quota tenant promotes fine
-    p1 = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
-    arb.register_page(p1.pid, 1, int(Tier.SLOW))
+    p1 = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=1)
     assert pool.promote_page(p1.pid).name == "NONE"
     assert arb.promoted_total[1] == 1
 
@@ -167,37 +216,76 @@ def test_token_bucket_rate_limits_promotions(pool_cls):
     # equal weights -> 1 token per tenant per interval, burst = refill
     pids = []
     for _ in range(4):
-        p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
-        arb.register_page(p.pid, 0, int(Tier.SLOW))
+        p = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=0)
         pids.append(p.pid)
     results = [pool.promote_page(pid).name for pid in pids]
     assert results.count("NONE") == 1 and results.count("QOS") == 3
     assert arb.denied_token[0] == 3
-    arb.end_interval()  # refill
-    p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
-    arb.register_page(p.pid, 0, int(Tier.SLOW))
+    arb.note_interval()  # refill
+    p = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=0)
     assert pool.promote_page(p.pid).name == "NONE"
+
+
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_batched_admission_matches_scalar_sequence(pool_cls):
+    """admit_promotions(batch) == per-pid admissions in order, including
+    intra-batch token consumption and provisional residency."""
+
+    def build():
+        cfg = QosConfig(mode="static", shares=(0.5, 0.5),
+                        promote_tokens_per_interval=4.0, token_burst=1.0)
+        pool = pool_cls(16, 64)
+        arb = QosArbiter(2, fast_frames=16, config=cfg)
+        pool.control = arb
+        pids = []
+        for i in range(12):
+            p = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=i % 2)
+            pids.append(p.pid)
+        # tenant 0 near its 8-frame quota: 6 resident fast pages
+        for _ in range(6):
+            pool.allocate(PageType.ANON, prefer=Tier.FAST, tenant=0)
+        return arb, pids
+
+    arb_b, pids = build()
+    batched = list(np.asarray(arb_b.admit_promotions(np.asarray(pids))))
+    arb_s, pids2 = build()
+    scalar = [bool(arb_s.admit_promotions((pid,))[0]) for pid in pids2]
+    # the batch assumes admitted migrations succeed; mirror that in the
+    # scalar replay by applying the residency note per admission
+    arb_s2, pids3 = build()
+    scalar_seq = []
+    for pid in pids3:
+        ok = bool(arb_s2.admit_promotions((pid,))[0])
+        scalar_seq.append(ok)
+        if ok:
+            arb_s2.note_promote(pid)
+    assert batched == scalar_seq
+    assert list(arb_b.tokens) == list(arb_s2.tokens)
+    assert list(arb_b.denied_quota) == list(arb_s2.denied_quota)
+    assert list(arb_b.denied_token) == list(arb_s2.denied_token)
+    del scalar  # the no-residency replay intentionally unused beyond build
 
 
 @pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
 def test_token_refunded_when_migration_fails(pool_cls):
     """An admitted promotion that finds no free fast frame must not
     drain the tenant's bucket — pressure is not the tenant's fault."""
+    # quota_slack keeps the tenant admissible even at full fast residency
+    # (every allocation is ledger-tracked now), so the *migration* is
+    # what fails — the path under test.
     cfg = QosConfig(mode="static", promote_tokens_per_interval=2.0,
-                    token_burst=1.0)
+                    token_burst=1.0, quota_slack=8)
     pool = pool_cls(4, 8)
     arb = QosArbiter(1, fast_frames=4, config=cfg)
-    pool.qos = arb
+    pool.control = arb
     # allocation stops at wm_min; promotions ignore it, so drain the
     # remaining fast frames with promotions to reach zero free
     while pool.free_frames(Tier.FAST) > pool.wm_min:
-        pool.allocate(PageType.ANON, prefer=Tier.FAST)
+        pool.allocate(PageType.ANON, prefer=Tier.FAST, tenant=0)
     while pool.free_frames(Tier.FAST) > 0:
-        p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
-        arb.register_page(p.pid, 0, int(Tier.SLOW))
+        p = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=0)
         assert pool.promote_page(p.pid).name == "NONE"
-    p = pool.allocate(PageType.ANON, prefer=Tier.SLOW)
-    arb.register_page(p.pid, 0, int(Tier.SLOW))
+    p = pool.allocate(PageType.ANON, prefer=Tier.SLOW, tenant=0)
     tokens_before = float(arb.tokens[0])
     assert tokens_before >= 1.0  # the failed attempt is not token-starved
     assert pool.promote_page(p.pid).name == "TARGET_LOW_MEM"
@@ -212,8 +300,7 @@ def test_over_quota_tenants_demote_first(pool_cls):
     # interleave: tenant 1 owns the odd allocation ranks and is pushed
     # over quota; tenant 0 stays under
     for i in range(40):
-        p = pool.allocate(PageType.ANON)
-        arb.register_page(p.pid, i % 2, int(p.tier))
+        pool.allocate(PageType.ANON, tenant=i % 2)
     arb.fast_pages[1] = 40  # force tenant 1 over its 32-frame quota
     victims = pool.demotion_victims(10)
     tenants = [arb.tenant_of_page(pid) for pid in victims]
@@ -226,19 +313,42 @@ def test_over_quota_tenants_demote_first(pool_cls):
     assert ones == sorted(ones) and zeros == sorted(zeros)
 
 
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_over_quota_tenant_allocations_steer_slow(pool_cls):
+    """§5.4 generalized: an over-quota tenant's new pages go slow-first
+    while an under-quota tenant keeps fast-first placement."""
+    cfg = QosConfig(mode="static", shares=(0.5, 0.5))
+    pool, arb = _pool_with_arbiter(pool_cls, cfg, frames=64)
+    arb.fast_pages[0] = 40  # tenant 0 over its 32-frame quota
+    steered = pool.allocate(PageType.ANON, tenant=0)
+    assert steered.tier == Tier.SLOW
+    assert pool.vmstat.pgalloc_steered == 1
+    normal = pool.allocate(PageType.ANON, tenant=1)
+    assert normal.tier == Tier.FAST
+    assert pool.vmstat.pgalloc_steered == 1
+    # caller-forced placement is never overridden by steering
+    forced = pool.allocate(PageType.ANON, prefer=Tier.FAST, tenant=0)
+    assert forced.tier == Tier.FAST
+    assert pool.vmstat.pgalloc_steered == 1
+    # pinned pages can never migrate back — steering leaves them alone
+    pinned = pool.allocate(PageType.ANON, pinned=True, tenant=0)
+    assert pinned.tier == Tier.FAST
+    assert pool.vmstat.pgalloc_steered == 1
+
+
 def test_dynamic_quotas_track_hotness_and_priority():
     cfg = QosConfig(mode="dynamic",
                     classes=("latency_critical", "batch"), min_share=0.05)
     arb = QosArbiter(2, fast_frames=100, config=cfg)
     # equal measured hotness -> quotas split by priority weight (4:1)
-    arb.note_access_counts(np.asarray([100, 100]))
-    arb.end_interval()
+    arb.note_access_tiers(np.asarray([100, 100]), np.zeros(2, np.int64))
+    arb.note_interval()
     assert arb.quota[0] == pytest.approx(80.0)
     assert arb.quota[1] == pytest.approx(20.0)
     # hotness flips 1:9 -> batch demand grows, LC keeps its weight edge
     for _ in range(20):
-        arb.note_access_counts(np.asarray([10, 90]))
-        arb.end_interval()
+        arb.note_access_tiers(np.asarray([10, 90]), np.zeros(2, np.int64))
+        arb.note_interval()
     assert arb.quota[1] > 20.0
     assert arb.quota[0] > arb.quota[1] * 0.3  # floor + weight hold
     assert arb.quota[0] >= cfg.min_share * 100
@@ -248,25 +358,27 @@ def test_quota_violation_intervals_counted():
     arb = QosArbiter(2, fast_frames=10,
                      config=QosConfig(mode="static", shares=(0.5, 0.5)))
     arb.fast_pages[:] = (9, 1)  # tenant 0 over its 5-frame quota
-    arb.end_interval()
-    arb.end_interval()
+    arb.note_interval()
+    arb.note_interval()
     assert arb.quota_violation_intervals == 2
     assert list(arb.violations_by_tenant) == [2, 0]
 
 
 def test_accounting_is_growable_and_ignores_untracked():
     acc = TenantAccounting(1)
-    acc.register_page(5, 0, 0)
+    acc.note_alloc(5, 0, 0)
     acc.ensure_tenants(3)
-    acc.register_page(6, 2, 1)
+    acc.note_alloc(6, 2, 1)
     acc.note_demote(5)
     acc.note_free(6, 1)
     acc.note_free(999_999, 0)  # untracked + out of range: no-op
+    acc.note_alloc(7, -1, 0)  # untracked tenant: no-op
     assert list(acc.fast_pages) == [0, 0, 0]
     assert list(acc.slow_pages) == [1, 0, 0]
     assert list(acc.demoted_total) == [1, 0, 0]
-    assert acc.admit_promotion(12345)  # neutral surface admits anything
+    assert acc.admit_promotions((12345,))[0]  # neutral: admits anything
     assert acc.order_demotion_victims([3, 1, 2]) == [3, 1, 2]
+    assert not acc.steers_allocation
 
 
 def test_qos_config_validation():
@@ -277,6 +389,67 @@ def test_qos_config_validation():
     arb = QosArbiter(1, fast_frames=8, config=QosConfig())
     with pytest.raises(ValueError):
         arb.configure_tenant(0, "platinum")
+    with pytest.raises(ValueError):
+        SlowdownControllerConfig(slo={"latency_critical": 1.2})  # incomplete
+    with pytest.raises(ValueError):
+        SlowdownControllerConfig(gain=0.0)
+
+
+# --------------------------------------------------------------------- #
+# the slowdown controller
+# --------------------------------------------------------------------- #
+def test_controller_shifts_share_toward_slow_tenants():
+    """A tenant measured above its SLO target gains fast-tier share; one
+    below target gives share back."""
+    ctrl = SlowdownController(
+        2, fast_frames=100,
+        config=SlowdownControllerConfig(
+            slo={"latency_critical": 1.2, "standard": 1.2, "batch": 1.2},
+            slow_cost=3.0,
+            qos=QosConfig(classes=("standard", "standard")),
+        ),
+    )
+    s0 = ctrl.shares.copy()
+    for _ in range(8):
+        # tenant 0 all-slow (slowdown 3.0 > 1.2), tenant 1 all-fast (1.0)
+        ctrl.note_access_tiers(np.asarray([0, 100]), np.asarray([100, 0]))
+        ctrl.note_interval()
+    assert ctrl.shares[0] > s0[0]
+    assert ctrl.shares[1] < s0[1]
+    assert ctrl.shares.sum() == pytest.approx(1.0)
+    assert ctrl.quota[0] > ctrl.quota[1]
+    summary = ctrl.qos_summary()
+    assert summary["mode"] == "slowdown_controller"
+    assert summary["slo_targets"] == [1.2, 1.2]
+
+
+def test_controller_holds_shares_at_slo():
+    """Tenants measured exactly at target keep their shares (no drift)."""
+    ctrl = SlowdownController(
+        2, fast_frames=64,
+        config=SlowdownControllerConfig(
+            slo={"latency_critical": 2.0, "standard": 2.0, "batch": 2.0},
+            slow_cost=3.0,
+            qos=QosConfig(classes=("standard", "standard")),
+        ),
+    )
+    s0 = ctrl.shares.copy()
+    for _ in range(5):
+        # 50/50 fast/slow at slow_cost 3 -> measured slowdown 2.0 == SLO
+        ctrl.note_access_tiers(np.asarray([50, 50]), np.asarray([50, 50]))
+        ctrl.note_interval()
+    assert np.allclose(ctrl.shares, s0)
+
+
+def test_controller_grows_with_tenants():
+    ctrl = SlowdownController(1, fast_frames=64,
+                              config=SlowdownControllerConfig())
+    ctrl.configure_tenant(2, "batch")
+    assert ctrl.n_tenants == 3
+    assert len(ctrl.shares) == 3 and len(ctrl.targets) == 3
+    assert len(ctrl.slowdown_ewma) == 3
+    assert ctrl.shares.sum() == pytest.approx(1.0)
+    assert ctrl.targets[2] == ctrl.ctrl.slo["batch"]
 
 
 # --------------------------------------------------------------------- #
@@ -315,11 +488,16 @@ def test_jain_index_is_one_for_equal_slowdowns():
 @pytest.mark.slow
 def test_qos_improves_latency_critical_slowdown():
     """On the contended 3-tenant mix, the latency-critical tenant's
-    modeled slowdown improves under tpp+qos vs tenant-blind tpp."""
+    modeled slowdown improves under tpp+qos vs tenant-blind tpp, and
+    the slowdown controller improves it further."""
     cfg = TppConfig(demote_budget=512, promote_budget=256, sample_rate=0.1)
     qos = QosConfig(mode="dynamic",
                     classes=("latency_critical", "standard", "batch"),
                     promote_tokens_per_interval=128.0)
+    ctrl = SlowdownControllerConfig(
+        qos=QosConfig(classes=("latency_critical", "standard", "batch"),
+                      promote_tokens_per_interval=128.0),
+    )
 
     def run(q):
         sim = TieredSimulator(
@@ -333,8 +511,10 @@ def test_qos_improves_latency_critical_slowdown():
 
     base = run(None)
     qres = run(qos)
+    cres = run(ctrl)
     assert qres.tenant_slowdowns()[0] < base.tenant_slowdowns()[0]
     assert qres.jains_fairness() > base.jains_fairness()
+    assert cres.tenant_slowdowns()[0] < base.tenant_slowdowns()[0]
 
 
 # --------------------------------------------------------------------- #
@@ -374,18 +554,35 @@ def test_serving_tags_frames_by_tenant_and_class(tiny_model):
                         max_new=8, qos_class=cls, tenant=t)
         for t, cls in ((0, "latency_critical"), (1, "batch"))
     ]
-    assert eng.qos.classes[:2] == ["latency_critical", "batch"]
+    assert eng.control.classes[:2] == ["latency_critical", "batch"]
+    assert eng.kv.pool.control is eng.control
     for rid in rids:
         seq = eng.seqs[rid]
         for pid in seq.pages:
-            assert eng.qos.tenant_of_page(pid) == seq.tenant
+            assert eng.control.tenant_of_page(pid) == seq.tenant
     for _ in range(8):
         eng.step()
-    eng.qos.check_consistency(eng.kv.pool)
-    assert int(eng.qos.access_interval.sum() + eng.qos.hot_ewma.sum()) > 0
+    eng.control.check_consistency(eng.kv.pool)
+    assert int(eng.control.access_interval.sum()
+               + eng.control.hot_ewma.sum()) > 0
     eng.finish(rids[0])  # frees flow back through the ledger
-    eng.qos.check_consistency(eng.kv.pool)
+    eng.control.check_consistency(eng.kv.pool)
     assert eng.stats()["qos"]["classes"][:2] == ["latency_critical", "batch"]
+
+
+def test_serving_accepts_ready_made_control(tiny_model):
+    """EngineConfig.qos may be an already-built TieringControl (e.g. a
+    telemetry-only TenantAccounting) — the lifecycle surface, including
+    configure_tenant, must work without arbiter-specific attributes."""
+    acc = TenantAccounting(1)
+    eng = _serving_engine(tiny_model, "reference", acc)
+    rid = eng.add_request([1, 2, 3, 4, 5], max_new=4, tenant=0)
+    for _ in range(4):
+        eng.step()
+    assert eng.control is acc and eng.kv.pool.control is acc
+    acc.check_consistency(eng.kv.pool)
+    assert eng.stats().get("qos") is None  # telemetry-only: no summary
+    eng.finish(rid)
 
 
 def test_add_request_invalid_qos_class_leaves_no_state(tiny_model):

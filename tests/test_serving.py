@@ -153,11 +153,73 @@ class TestLifecycle:
             max_seqs=2, data_plane=plane))
         r0 = eng.add_request([1, 2, 3], max_new=2)
         eng.add_request([4, 5, 6], max_new=2)
-        with pytest.raises(AdmissionError):
+        with pytest.raises(AdmissionError) as exc:
             eng.add_request([7, 8, 9], max_new=2)
+        assert exc.value.reason == "max_seqs"
         eng.finish(r0)  # freeing a slot re-opens admission
         r2 = eng.add_request([7, 8, 9], max_new=2)
         assert eng.step()[r2] is not None
+
+    def test_batch_class_shed_under_control_plane_pressure(self, tiny):
+        """Control-plane admission gate: while the fast tier sits at the
+        reclaim watermark with a tenant over quota, new *batch*-class
+        requests shed (AdmissionError reason="qos_pressure"); higher
+        classes keep admitting, and pressure easing re-opens admission."""
+        from repro.qos import QosConfig
+
+        cfg, params = tiny
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=8, num_slow=64, topk_pages=None,
+            max_seqs=8, tpp=TppConfig(demote_budget=4, promote_budget=2),
+            qos=QosConfig(mode="static", shares=(0.9, 0.1))))
+        lc = eng.add_request(list(rng.integers(0, cfg.vocab, 30)),
+                             max_new=32, qos_class="latency_critical",
+                             tenant=0)
+        b0 = eng.add_request(list(rng.integers(0, cfg.vocab, 20)),
+                             max_new=32, qos_class="batch", tenant=1)
+        for _ in range(4):
+            eng.step()
+        assert eng.control.shed_batch_request(eng.kv.pool)
+        with pytest.raises(AdmissionError) as exc:
+            eng.add_request([1, 2, 3], max_new=2, qos_class="batch",
+                            tenant=1)
+        assert exc.value.reason == "qos_pressure"
+        assert len(eng.seqs) == 2  # the shed request left no state behind
+        # non-batch classes are never shed
+        r = eng.add_request([1, 2, 3], max_new=2, qos_class="standard",
+                            tenant=2)
+        assert r in eng.seqs
+        # releasing the noisy tenant's residency re-opens batch admission
+        eng.finish(b0)
+        eng.finish(lc)
+        eng.finish(r)
+        assert not eng.control.shed_batch_request(eng.kv.pool)
+        r2 = eng.add_request([1, 2, 3], max_new=2, qos_class="batch",
+                             tenant=1)
+        assert r2 in eng.seqs
+
+    def test_admission_control_opt_out(self, tiny):
+        """EngineConfig.admission_control=False restores unconditional
+        batch admission (operators can disable shedding)."""
+        from repro.qos import QosConfig
+
+        cfg, params = tiny
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=8, num_slow=64, topk_pages=None,
+            max_seqs=8, tpp=TppConfig(demote_budget=4, promote_budget=2),
+            qos=QosConfig(mode="static", shares=(0.9, 0.1)),
+            admission_control=False))
+        eng.add_request(list(rng.integers(0, cfg.vocab, 30)),
+                        max_new=32, qos_class="latency_critical", tenant=0)
+        eng.add_request(list(rng.integers(0, cfg.vocab, 20)),
+                        max_new=32, qos_class="batch", tenant=1)
+        for _ in range(4):
+            eng.step()
+        r = eng.add_request([1, 2, 3], max_new=2, qos_class="batch",
+                            tenant=1)
+        assert r in eng.seqs
 
 
 class TestExpertTiering:
@@ -191,3 +253,46 @@ class TestExpertTiering:
         w, _ = m_tpp.lookup(0, 3)
         np.testing.assert_allclose(w["wi"], weights["wi"][0, 3])
         m_tpp.pool.check_invariants()
+
+    def test_expert_frames_attributed_to_tenants(self):
+        """Shared-expert frames land in the per-tenant ledger: residency
+        follows migrations and hotness accrues per tenant (ROADMAP
+        "expert tiering under QoS")."""
+        from repro.qos import TenantAccounting
+        from repro.serving.expert_tier import (
+            ExpertTierConfig,
+            ExpertTierManager,
+        )
+
+        L, E = 2, 8
+        rng = np.random.default_rng(1)
+        weights = {"wi": rng.standard_normal((L, E, 4, 8)).astype(np.float32)}
+        acc = TenantAccounting(2)
+        mgr = ExpertTierManager(
+            ExpertTierConfig(n_layers=L, n_experts=E, fast_capacity=6,
+                             tpp=TppConfig(demote_budget=4, promote_budget=4)),
+            weights,
+            control=acc,
+            tenant_of_expert=lambda l, e: l,  # layer 0 -> tenant 0, 1 -> 1
+        )
+        assert mgr.pool.control is acc
+        acc.check_consistency(mgr.pool)
+        assert list(acc.slow_pages) == [E, E]  # all experts start slow
+        for step in range(60):
+            hits = []
+            for l in range(L):
+                r = np.minimum(rng.zipf(1.6, size=2), E) - 1
+                hits += [(l, int(x)) for x in r]
+            for (l, e) in hits:
+                mgr.lookup(l, e)
+            mgr.step(hits)
+            if step % 4 == 3:  # interval ticks stay with the caller
+                mgr.pool.end_interval()
+        acc.check_consistency(mgr.pool)
+        placement = mgr.placement()
+        assert list(acc.fast_pages) == [int(placement[0].sum()),
+                                        int(placement[1].sum())]
+        assert int(acc.promoted_total.sum()) == \
+            mgr.pool.vmstat.pgpromote_total
+        assert int(acc.access_interval.sum() + acc.hot_ewma.sum()) > 0
+        assert acc.intervals > 0  # interval ticks flowed from the pool
