@@ -7,6 +7,10 @@ trace generation excluded).  Results land in ``BENCH_engine.json`` next
 to the working directory for the CI trendline; parity of the vmstat
 trajectories is asserted on every run — a speedup that changes results
 is a bug, not a win.
+
+The run also measures the TierSan ``conservation`` sanitizer's overhead
+on the vectorized fast path (``tiersan_overhead_pct``): the conservation
+laws are meant to stay on in long runs, so the acceptance bar is <5%.
 """
 
 from __future__ import annotations
@@ -17,6 +21,7 @@ import time
 from typing import List
 
 from benchmarks.common import SEED
+from repro.analysis.tiersan import TierSan
 from repro.core import TieredSimulator, TppConfig, record_trace
 from repro.core.trace import WORKLOADS, MultiTenantTrace
 
@@ -84,6 +89,41 @@ def run(quick: bool = False, engine: str = "reference") -> List[str]:
         results[policy] = row
         out.append(f"engine/{policy}_speedup,0.0,x{speedup:.1f}")
 
+    # TierSan conservation overhead on the vectorized fast path: the
+    # same tpp replay with and without the sanitizer attached (every
+    # interval).  Pairs run interleaved with best-of-3 per arm so both
+    # see the same cache warmth — a non-interleaved baseline drowns the
+    # sub-ms checks in scheduler noise.
+    times = {"off": float("inf"), "conservation": float("inf")}
+    checks = 0
+    for _ in range(3):
+        for level in ("off", "conservation"):
+            sim = TieredSimulator(MIX, "tpp", fast, slow, config=CFG,
+                                  seed=SEED, trace=recorded.reset(),
+                                  engine="vectorized")
+            if level != "off":
+                sim.pool.tiersan = TierSan(level)
+            t0 = time.process_time()
+            sim.run(steps)
+            times[level] = min(times[level], time.process_time() - t0)
+            if sim.pool.tiersan is not None:
+                checks = sim.pool.tiersan.checks
+    assert checks > 0, "sanitizer did not run"
+    overhead_pct = max(
+        0.0, (times["conservation"] - times["off"]) / times["off"] * 100.0
+    )
+    tiersan_row = {
+        "level": "conservation",
+        "checks": checks,
+        "seconds": round(times["conservation"], 3),
+        "baseline_seconds": round(times["off"], 3),
+        "overhead_pct": round(overhead_pct, 2),
+    }
+    out.append(
+        f"engine/tiersan_conservation,{times['conservation'] * 1e6 / steps:.1f},"
+        f"overhead_pct={overhead_pct:.2f}"
+    )
+
     payload = {
         "mix": MIX,
         "total_pages": total_pages,
@@ -92,6 +132,7 @@ def run(quick: bool = False, engine: str = "reference") -> List[str]:
         "fast_frames": fast,
         "slow_frames": slow,
         "results": results,
+        "tiersan": tiersan_row,
     }
     with open("BENCH_engine.json", "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,0 +1,31 @@
+"""Static analysis + runtime sanitizers for the tiering stack.
+
+Three tools (DESIGN.md §9):
+
+* :mod:`repro.analysis.repro_lint` — AST static analyzer with
+  repo-specific rules (host↔device syncs in jit-reachable code, traced
+  control flow, the removed ``pool.qos`` surface, missing tenant
+  attribution, …).  CLI: ``python -m repro.analysis.repro_lint <paths>``.
+* :mod:`repro.analysis.plan_verify` — hazard verifier for staged
+  ``page_gather``/``page_scatter`` migration plans (RAW frame reuse,
+  duplicate destinations, trash-frame misuse, out-of-range frames).
+* :mod:`repro.analysis.tiersan` — TierSan, the leveled runtime
+  invariant sanitizer for both pool engines (conservation laws every
+  interval, full LRU/frame/ledger audits on demand) plus a differential
+  engine-parity mode.
+"""
+
+from repro.analysis.plan_verify import (  # noqa: F401
+    CopyOp,
+    Hazard,
+    PlanHazardError,
+    check_plan,
+    plan_from_staged,
+    verify_plan,
+)
+from repro.analysis.tiersan import (  # noqa: F401
+    TierSan,
+    TierSanError,
+    diff_engines,
+    tiersan_from_env,
+)

@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.tiersan import tiersan_from_env
 from repro.core.control import NULL_CONTROL, AllocRequest, TieringControl
 from repro.core.types import (
     DemoteFail,
@@ -131,11 +132,21 @@ class _FrameStack:
         return self._top
 
     def pop(self) -> int:
+        if self._top <= 0:
+            raise IndexError("pop from empty frame stack")
         self._top -= 1
         return int(self._arr[self._top])
 
     def pop_many(self, k: int) -> np.ndarray:
         """k frames in the order k successive pops would return them."""
+        if not 0 <= k <= self._top:
+            # A negative slice start would silently wrap and hand out
+            # frames below the stack base (and leave _top negative).
+            raise ValueError(
+                f"pop_many({k}) with only {self._top} free frames"
+            )
+        if k == 0:
+            return np.empty(0, np.int64)
         out = self._arr[self._top - k : self._top][::-1].copy()
         self._top -= k
         return out
@@ -147,6 +158,8 @@ class _FrameStack:
         self._top += 1
 
     def push_many(self, frames: np.ndarray) -> None:
+        if len(frames) == 0:
+            return
         need = self._top + len(frames)
         if need > len(self._arr):
             self._arr = np.resize(self._arr, max(need, 2 * len(self._arr)))
@@ -185,6 +198,9 @@ class VectorPagePool:
         # disabled path bit-identical to a control-free pool.
         self.control: TieringControl = NULL_CONTROL
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
+        # Runtime invariant sanitizer (TIERSAN_LEVEL=conservation|full);
+        # None when disabled — zero overhead on the interval path.
+        self.tiersan = tiersan_from_env()
 
         cap = self.INITIAL_CAPACITY
         self._next_pid = 0
@@ -551,6 +567,8 @@ class VectorPagePool:
         tick the control plane (quota re-division, token refill)."""
         np.left_shift(self._history, _ONE, out=self._history)
         self.control.note_interval()
+        if self.tiersan is not None:
+            self.tiersan.on_interval(self)
 
     # ------------------------------------------------------------------ #
     # migration
@@ -570,6 +588,7 @@ class VectorPagePool:
         return True
 
     def demote_page(self, pid: int) -> DemoteFail:
+        # repro-lint: disable=assert-host-sync (scalar-path precondition)
         assert self._tier[pid].item() == 0, "demotion source must be FAST"
         flags = self._flags[pid].item()
         if flags & _UNEVICTABLE:
@@ -586,6 +605,7 @@ class VectorPagePool:
         return DemoteFail.NONE
 
     def promote_page(self, pid: int) -> PromoteFail:
+        # repro-lint: disable=assert-host-sync (scalar-path precondition)
         assert self._tier[pid].item() == 1, "promotion source must be SLOW"
         flags = self._flags[pid].item()
         if flags & _UNEVICTABLE:

@@ -23,6 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.analysis.tiersan import tiersan_from_env
 from repro.core.control import NULL_CONTROL, AllocRequest, TieringControl
 from repro.core.lru import NodeLru
 from repro.core.types import (
@@ -107,6 +108,9 @@ class PagePool:
         # SLO feedback (SlowdownController) implementations.
         self.control: TieringControl = NULL_CONTROL
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
+        # Runtime invariant sanitizer (TIERSAN_LEVEL=conservation|full);
+        # None when disabled — zero overhead on the interval path.
+        self.tiersan = tiersan_from_env()
 
     # ------------------------------------------------------------------ #
     # frame accounting
@@ -311,6 +315,8 @@ class PagePool:
         for page in self.pages.values():
             page.history = (page.history << 1) & ((1 << 64) - 1)
         self.control.note_interval()
+        if self.tiersan is not None:
+            self.tiersan.on_interval(self)
 
     # ------------------------------------------------------------------ #
     # migration (§5.1) — demote / promote / evict

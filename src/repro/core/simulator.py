@@ -76,6 +76,15 @@ class SimResult:
     qos: Optional[Dict] = None
 
     @property
+    def decision_timeline(self) -> Optional[List[Dict]]:
+        """Per-interval control-plane decision deltas (steered / denied /
+        shed / share vector) recorded by the arbiter; ``None`` without a
+        QoS control plane."""
+        if self.qos is None:
+            return None
+        return self.qos.get("timeline")
+
+    @property
     def avg_access_cost(self) -> float:
         """Mean modeled memory-access cost (ideal = 1.0)."""
         return self.modeled_time / self.ideal_time if self.ideal_time else 1.0

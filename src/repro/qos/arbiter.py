@@ -75,6 +75,14 @@ class QosArbiter(TenantAccounting):
         self.denied_token = np.zeros(self.n_tenants, np.int64)
         self.violations_by_tenant = np.zeros(self.n_tenants, np.int64)
         self.quota_violation_intervals = 0
+        # decision timeline: cumulative steer/shed counts plus one
+        # per-interval delta record (steered / denied / shed / share
+        # vector) so a TierSan report or a parity diff can point at the
+        # interval where placement went wrong.
+        self.steered_total = 0
+        self.shed_total = 0
+        self.timeline: List[Dict] = []
+        self._tl_prev: Optional[Dict[str, int]] = None
 
     # ---------------------------------------------------------------- #
     # shares / growth
@@ -140,6 +148,8 @@ class QosArbiter(TenantAccounting):
         if (req.prefer is None and not req.pinned
                 and 0 <= req.tenant < self.n_tenants
                 and self._over_quota(req.tenant)):
+            if req.default != Tier.SLOW:
+                self.steered_total += 1
             return Tier.SLOW
         return req.default
 
@@ -248,14 +258,18 @@ class QosArbiter(TenantAccounting):
         """
         if pool.free_frames(Tier.FAST) > pool.wm_demote:
             return False
-        return bool(
+        shed = bool(
             (self.fast_pages > self.quota + self.config.quota_slack).any()
         )
+        if shed:
+            self.shed_total += 1
+        return shed
 
     # ---------------------------------------------------------------- #
     # interval close: violations, dynamic re-division, token refill
     # ---------------------------------------------------------------- #
     def note_interval(self) -> None:
+        self._record_interval()
         over = self.fast_pages > self.quota + self.config.quota_slack
         if over.any():
             self.quota_violation_intervals += 1
@@ -270,6 +284,37 @@ class QosArbiter(TenantAccounting):
     # ---------------------------------------------------------------- #
     # observability
     # ---------------------------------------------------------------- #
+    #: Per-interval decision records retained (oldest dropped beyond this).
+    TIMELINE_MAX = 512
+
+    def _record_interval(self) -> None:
+        """Append this interval's decision deltas to the timeline.
+
+        Called at the top of every ``note_interval`` override (the
+        slowdown controller bypasses the arbiter's, so it calls this
+        directly).  Deltas are derived from cumulative counters, which
+        are bit-identical across engines — so the timeline is too.
+        """
+        cur = {
+            "steered": int(self.steered_total),
+            "shed": int(self.shed_total),
+            "denied_quota": int(np.sum(self.denied_quota)),
+            "denied_token": int(np.sum(self.denied_token)),
+            "promoted": int(np.sum(self.promoted_total)),
+            "demoted": int(np.sum(self.demoted_total)),
+        }
+        prev = self._tl_prev or {k: 0 for k in cur}
+        entry: Dict = {"interval": int(self.intervals)}
+        entry.update({k: cur[k] - prev.get(k, 0) for k in cur})
+        shares = getattr(self, "shares", None)
+        if shares is None:
+            shares = self.quota / max(1, self.fast_frames)
+        entry["shares"] = [round(float(s), 4) for s in shares]
+        self._tl_prev = cur
+        self.timeline.append(entry)
+        if len(self.timeline) > self.TIMELINE_MAX:
+            del self.timeline[: len(self.timeline) - self.TIMELINE_MAX]
+
     def qos_summary(self) -> Optional[Dict]:
         return {
             "mode": self.config.mode,
@@ -283,4 +328,7 @@ class QosArbiter(TenantAccounting):
             "denied_token": [int(x) for x in self.denied_token],
             "quota_violation_intervals": int(self.quota_violation_intervals),
             "violations_by_tenant": [int(x) for x in self.violations_by_tenant],
+            "steered_total": int(self.steered_total),
+            "shed_total": int(self.shed_total),
+            "timeline": [dict(e) for e in self.timeline],
         }

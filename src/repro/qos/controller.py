@@ -156,6 +156,7 @@ class SlowdownController(QosArbiter):
     # interval close: measure → error → share update
     # ---------------------------------------------------------------- #
     def note_interval(self) -> None:
+        self._record_interval()  # decision timeline (arbiter helper)
         slack = self.config.quota_slack
         over = self.fast_pages > self.quota + slack
         if over.any():

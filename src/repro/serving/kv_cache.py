@@ -37,12 +37,14 @@ under pressure.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.plan_verify import CopyOp, check_plan, plan_from_staged
 from repro.core import PagePool, PageType, Tier, TppConfig
 from repro.kernels import ops as kernel_ops
 
@@ -111,6 +113,14 @@ class TieredKVCache:
         self._pending: List[_StagedCopy] = []
         self._pending_src: set = set()
         self._pending_dst: set = set()
+        # Debug-build plan verification (TIERSAN_PLAN_CHECK=1): every
+        # flushed migration batch is checked for frame hazards under the
+        # gathers-first staging the kernels execute, and the last plan is
+        # kept for offline triage (repro.analysis.plan_verify).
+        self.plan_check = (
+            os.environ.get("TIERSAN_PLAN_CHECK", "") not in ("", "0")
+        )
+        self.last_plan: Optional[List[CopyOp]] = None
         # one shared staged-copy width → one compiled gather/scatter
         # shape for the whole engine lifetime.  Sized from the policy
         # budgets (an interval batch can't exceed them) and prewarmed so
@@ -185,6 +195,14 @@ class TieredKVCache:
             return
         pending, self._pending = self._pending, []
         self._pending_src, self._pending_dst = set(), set()
+        if self.plan_check:
+            self.last_plan = plan_from_staged(pending)
+            check_plan(
+                self.last_plan,
+                num_frames=self.trash_frame + 1,
+                trash_frame=self.trash_frame,
+                staging="gathers-first",
+            )
         # pad every batch to one shared power-of-two width via the trash
         # frame (a self-copy of garbage): batch-size jitter then never
         # forces a gather/scatter recompile

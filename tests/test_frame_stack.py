@@ -1,0 +1,82 @@
+"""_FrameStack edge-case regressions: underflow and empty batches.
+
+Before the guards, ``pop_many(k)`` with ``k > len(stack)`` sliced with a
+negative start — silently wrapping around and handing out frames below
+the stack base while leaving ``_top`` negative (a double-mapping factory).
+``pop_many(0)`` sliced ``[top:top][::-1]`` fine but these tests pin the
+contract; ``push_many([])`` must be a no-op, not a resize.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import _FrameStack
+
+
+def test_initial_order_matches_reference():
+    s = _FrameStack(4)
+    assert [s.pop() for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_pop_empty_raises():
+    s = _FrameStack(2)
+    s.pop(), s.pop()
+    with pytest.raises(IndexError, match="empty"):
+        s.pop()
+
+
+def test_pop_many_matches_successive_pops():
+    a, b = _FrameStack(8), _FrameStack(8)
+    got = b.pop_many(5)
+    assert got.tolist() == [a.pop() for _ in range(5)]
+    assert len(a) == len(b) == 3
+
+
+def test_pop_many_underflow_raises():
+    s = _FrameStack(4)
+    s.pop_many(3)
+    with pytest.raises(ValueError, match="pop_many"):
+        s.pop_many(2)
+    assert len(s) == 1  # stack untouched by the failed pop
+    assert s.pop() == 3
+
+
+def test_pop_many_negative_raises():
+    s = _FrameStack(4)
+    with pytest.raises(ValueError, match="pop_many"):
+        s.pop_many(-1)
+    assert len(s) == 4
+
+
+def test_pop_many_zero_is_empty_array():
+    s = _FrameStack(4)
+    out = s.pop_many(0)
+    assert out.dtype == np.int64 and len(out) == 0
+    assert len(s) == 4
+
+
+def test_pop_many_zero_on_empty_stack():
+    s = _FrameStack(2)
+    s.pop_many(2)
+    assert s.pop_many(0).tolist() == []
+
+
+def test_push_many_empty_is_noop():
+    s = _FrameStack(4)
+    cap = len(s._arr)
+    s.push_many(np.empty(0, np.int64))
+    assert len(s) == 4 and len(s._arr) == cap
+
+
+def test_push_pop_round_trip():
+    s = _FrameStack(4)
+    frames = s.pop_many(4)
+    s.push_many(frames[::-1])
+    assert [s.pop() for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_push_many_grows_capacity():
+    s = _FrameStack(2)
+    s.push_many(np.arange(10, 30, dtype=np.int64))
+    assert len(s) == 22
+    assert s.pop() == 29

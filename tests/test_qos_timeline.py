@@ -1,0 +1,143 @@
+"""Per-interval decision-timeline export from the QoS control plane.
+
+The arbiter records one entry per interval — deltas of steered /
+denied / shed decisions plus the share vector — and ``qos_summary()``
+carries it into ``SimResult.qos`` and serving ``stats()``.  Decisions
+are pure functions of counters that are bit-identical across engines,
+so the timeline must be too.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import TieredSimulator, make_trace
+from repro.qos import QosArbiter, QosConfig, SlowdownControllerConfig
+
+ENTRY_KEYS = {"interval", "steered", "shed", "denied_quota",
+              "denied_token", "promoted", "demoted", "shares"}
+
+
+def run_sim(engine, qos, steps=30, workload="web+cache1"):
+    sim = TieredSimulator(
+        workload, "tpp", 200, 800, seed=7,
+        trace=make_trace(workload, seed=7, total_pages=500),
+        engine=engine, qos=qos,
+    )
+    return sim.run(steps, measure_from=5)
+
+
+# --------------------------------------------------------------------- #
+# arbiter unit behavior
+# --------------------------------------------------------------------- #
+class TestArbiterTimeline:
+    def test_entries_are_deltas(self):
+        arb = QosArbiter(2, 100)
+        arb.steered_total, arb.shed_total = 3, 1
+        arb.note_interval()
+        arb.steered_total = 5
+        arb.denied_quota[1] = 4
+        arb.note_interval()
+        first, second = arb.timeline
+        assert set(first) == ENTRY_KEYS
+        assert (first["interval"], first["steered"], first["shed"]) == (0, 3, 1)
+        assert (second["interval"], second["steered"], second["shed"]) == (1, 2, 0)
+        assert second["denied_quota"] == 4
+        assert len(first["shares"]) == 2
+        assert abs(sum(first["shares"]) - 1.0) < 1e-6
+
+    def test_delta_sums_recover_cumulative_totals(self):
+        arb = QosArbiter(3, 100)
+        for steered in (2, 7, 7, 11):
+            arb.steered_total = steered
+            arb.note_interval()
+        assert sum(e["steered"] for e in arb.timeline) == arb.steered_total
+
+    def test_timeline_bounded(self, monkeypatch):
+        monkeypatch.setattr(QosArbiter, "TIMELINE_MAX", 5)
+        arb = QosArbiter(2, 100)
+        for _ in range(8):
+            arb.note_interval()
+        assert len(arb.timeline) == 5
+        assert arb.timeline[0]["interval"] == 3
+        assert arb.timeline[-1]["interval"] == 7
+
+    def test_summary_exports_timeline_and_totals(self):
+        arb = QosArbiter(2, 100)
+        arb.steered_total = 2
+        arb.note_interval()
+        out = arb.qos_summary()
+        assert out["steered_total"] == 2
+        assert out["shed_total"] == 0
+        assert out["timeline"][0]["steered"] == 2
+        # exported copies, not live references into arbiter state
+        out["timeline"][0]["steered"] = 99
+        assert arb.timeline[0]["steered"] == 2
+
+
+# --------------------------------------------------------------------- #
+# simulator integration
+# --------------------------------------------------------------------- #
+QOS = QosConfig(mode="dynamic", classes=("latency_critical", "standard"))
+
+
+class TestSimResult:
+    def test_decision_timeline_exported(self):
+        res = run_sim("vectorized", QOS)
+        tl = res.decision_timeline
+        assert tl and tl is res.qos["timeline"]
+        for entry in tl:
+            assert set(entry) == ENTRY_KEYS
+        assert [e["interval"] for e in tl] == list(range(len(tl)))
+        # the run actually decided things, and the deltas account for
+        # every cumulative decision made up to the last interval close
+        assert sum(e["steered"] for e in tl) == res.qos["steered_total"]
+        assert sum(e["demoted"] for e in tl) <= sum(res.qos["demoted"])
+
+    def test_timeline_engine_parity(self):
+        ref = run_sim("reference", QOS)
+        vec = run_sim("vectorized", QOS)
+        assert ref.qos["timeline"] == vec.qos["timeline"]
+        assert ref.qos["steered_total"] == vec.qos["steered_total"]
+        assert ref.qos["shed_total"] == vec.qos["shed_total"]
+
+    def test_controller_timeline(self):
+        cfg = SlowdownControllerConfig(
+            qos=QosConfig(classes=("latency_critical", "standard")))
+        res = run_sim("vectorized", cfg)
+        tl = res.decision_timeline
+        assert tl and res.qos["mode"] == "slowdown_controller"
+        # the feedback loop owns the share vector: it must move
+        assert tl[0]["shares"] != tl[-1]["shares"]
+
+    def test_no_qos_means_no_timeline(self):
+        res = run_sim("vectorized", None)
+        assert res.qos is None and res.decision_timeline is None
+
+
+# --------------------------------------------------------------------- #
+# serving integration
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_serving_stats_carry_timeline():
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    eng = ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=8, num_slow=64, topk_pages=None,
+        max_seqs=8, qos=QosConfig(mode="static", shares=(0.9, 0.1))))
+    eng.add_request(list(rng.integers(0, cfg.vocab, 24)), max_new=16,
+                    qos_class="latency_critical", tenant=0)
+    eng.add_request(list(rng.integers(0, cfg.vocab, 16)), max_new=16,
+                    qos_class="batch", tenant=1)
+    for _ in range(6):
+        eng.step()
+    eng.kv.pool.end_interval()
+    qos = eng.stats()["qos"]
+    assert qos["timeline"]
+    assert set(qos["timeline"][0]) == ENTRY_KEYS
+    assert "steered_total" in qos and "shed_total" in qos

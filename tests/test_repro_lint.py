@@ -1,0 +1,461 @@
+"""repro-lint rule catalog tests: positive AND negative cases per rule.
+
+Every rule must both fire on a minimal offending snippet and stay quiet
+on the closest legitimate idiom — otherwise the lint lane in CI is
+either blind or noisy.  The final test pins "the repo itself is clean",
+which is what makes the CI lane meaningful.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.repro_lint import (
+    RULES,
+    Finding,
+    lint_paths,
+    lint_source,
+    main,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def lines_of(findings, rule):
+    return sorted(f.line for f in findings if f.rule == rule)
+
+
+# --------------------------------------------------------------------- #
+# jit-host-sync
+# --------------------------------------------------------------------- #
+class TestHostSync:
+    def test_item_in_jit_root(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return x.sum().item()\n"
+        )
+        fs = lint_source(src)
+        assert rules_of(fs) == ["jit-host-sync"]
+        assert lines_of(fs, "jit-host-sync") == [4]
+        assert ".item()" in fs[0].message
+
+    def test_item_in_reachable_helper(self):
+        # helper is not decorated but is called by a jit root by bare
+        # name in the same module -> still jit-reachable.
+        src = (
+            "import jax\n"
+            "def helper(x):\n"
+            "    return x.item()\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return helper(x)\n"
+        )
+        fs = lint_source(src)
+        assert rules_of(fs) == ["jit-host-sync"]
+        assert lines_of(fs, "jit-host-sync") == [3]
+
+    def test_int_cast_on_traced(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return int(x)\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-host-sync"]
+
+    def test_np_asarray_on_traced(self):
+        src = (
+            "import jax\n"
+            "import numpy as np\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    y = np.asarray(x)\n"
+            "    return y\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-host-sync"]
+
+    def test_assert_on_traced_value(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    assert x > 0\n"
+            "    return x\n"
+        )
+        assert "jit-host-sync" in rules_of(lint_source(src))
+
+    def test_negative_item_outside_jit(self):
+        src = (
+            "def host_only(x):\n"
+            "    return x.item()\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_free_call_result_is_host(self):
+        # Conservative taint: arbitrary free-function results are host
+        # data, so `is not None` checks on them never flag.
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x, make_mask):\n"
+            "    m = lookup_mask()\n"
+            "    if m is not None:\n"
+            "        x = x + 1\n"
+            "    return x\n"
+            "def lookup_mask():\n"
+            "    return None\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_int_on_host_value(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    n = int(x.shape[0])\n"
+            "    return x + n\n"
+        )
+        assert lint_source(src) == []
+
+
+# --------------------------------------------------------------------- #
+# jit-traced-control-flow
+# --------------------------------------------------------------------- #
+class TestTracedControlFlow:
+    def test_if_on_traced(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    if x > 0:\n"
+            "        return x\n"
+            "    return -x\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-traced-control-flow"]
+
+    def test_while_on_traced(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    while x > 0:\n"
+            "        x = x - 1\n"
+            "    return x\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-traced-control-flow"]
+
+    def test_negative_branch_on_static_arg(self):
+        src = (
+            "import functools\n"
+            "import jax\n"
+            "@functools.partial(jax.jit, static_argnames=('mode',))\n"
+            "def f(x, mode):\n"
+            "    if mode == 'fast':\n"
+            "        return x * 2\n"
+            "    return x\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_branch_on_shape(self):
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    if x.ndim == 2:\n"
+            "        return x.sum(axis=1)\n"
+            "    return x\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_membership_test(self):
+        # `in` / `is` comparisons are host predicates even on traced
+        # operand names (they compare identity / container membership).
+        src = (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x, names):\n"
+            "    if x is None:\n"
+            "        return names\n"
+            "    return x\n"
+        )
+        assert lint_source(src) == []
+
+
+# --------------------------------------------------------------------- #
+# jit-unstable-static
+# --------------------------------------------------------------------- #
+class TestUnstableStatic:
+    def test_static_name_missing_from_signature(self):
+        src = (
+            "import functools\n"
+            "import jax\n"
+            "@functools.partial(jax.jit, static_argnames=('mode', 'oops'))\n"
+            "def f(x, mode):\n"
+            "    return x\n"
+        )
+        fs = lint_source(src)
+        assert rules_of(fs) == ["jit-unstable-static"]
+        assert "oops" in fs[0].message
+
+    def test_static_with_mutable_default(self):
+        src = (
+            "import functools\n"
+            "import jax\n"
+            "@functools.partial(jax.jit, static_argnames=('opts',))\n"
+            "def f(x, opts=[]):\n"
+            "    return x\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-unstable-static"]
+
+    def test_negative_hashable_static(self):
+        src = (
+            "import functools\n"
+            "import jax\n"
+            "@functools.partial(jax.jit, static_argnames=('mode',))\n"
+            "def f(x, mode='fast'):\n"
+            "    return x\n"
+        )
+        assert lint_source(src) == []
+
+    def test_static_argnums_maps_to_params(self):
+        src = (
+            "import functools\n"
+            "import jax\n"
+            "@functools.partial(jax.jit, static_argnums=(1,))\n"
+            "def f(x, opts={}):\n"
+            "    return x\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-unstable-static"]
+
+
+# --------------------------------------------------------------------- #
+# jit-host-state-mutation
+# --------------------------------------------------------------------- #
+class TestHostStateMutation:
+    def test_self_attr_write_in_jit_method(self):
+        src = (
+            "import jax\n"
+            "class Engine:\n"
+            "    @jax.jit\n"
+            "    def step(self, x):\n"
+            "        self.counter = self.counter + 1\n"
+            "        return x\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-host-state-mutation"]
+
+    def test_self_subscript_write(self):
+        src = (
+            "import jax\n"
+            "class Engine:\n"
+            "    @jax.jit\n"
+            "    def step(self, x):\n"
+            "        self.cache[0] = x\n"
+            "        return x\n"
+        )
+        assert rules_of(lint_source(src)) == ["jit-host-state-mutation"]
+
+    def test_negative_local_assignment(self):
+        src = (
+            "import jax\n"
+            "class Engine:\n"
+            "    @jax.jit\n"
+            "    def step(self, x):\n"
+            "        y = x + 1\n"
+            "        return y\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_self_write_outside_jit(self):
+        src = (
+            "class Engine:\n"
+            "    def host_step(self, x):\n"
+            "        self.counter += 1\n"
+            "        return x\n"
+        )
+        assert lint_source(src) == []
+
+
+# --------------------------------------------------------------------- #
+# removed-pool-qos
+# --------------------------------------------------------------------- #
+class TestRemovedPoolQos:
+    def test_pool_qos_read(self):
+        src = (
+            "def f(pool):\n"
+            "    return pool.qos\n"
+        )
+        fs = lint_source(src)
+        assert rules_of(fs) == ["removed-pool-qos"]
+        assert "pool.control" in fs[0].message
+
+    def test_self_pool_qos(self):
+        src = (
+            "class S:\n"
+            "    def f(self):\n"
+            "        self.pool.qos.note_interval()\n"
+        )
+        assert rules_of(lint_source(src)) == ["removed-pool-qos"]
+
+    def test_negative_other_qos_attrs(self):
+        # cfg.qos / engine.qos are live config surfaces, not the
+        # removed pool hook.
+        src = (
+            "def f(cfg, engine):\n"
+            "    return cfg.qos, engine.qos\n"
+        )
+        assert lint_source(src) == []
+
+
+# --------------------------------------------------------------------- #
+# missing-tenant
+# --------------------------------------------------------------------- #
+class TestMissingTenant:
+    def test_allocate_without_tenant_in_tenant_scope(self):
+        src = (
+            "def place(pool, tenant_ids):\n"
+            "    for tid in tenant_ids:\n"
+            "        pool.allocate(1)\n"
+        )
+        fs = lint_source(src)
+        assert rules_of(fs) == ["missing-tenant"]
+        assert "ledger" in fs[0].message
+
+    def test_try_allocate_many_without_tenant(self):
+        src = (
+            "def place(pool, tids):\n"
+            "    pool.try_allocate_many(pids)\n"
+        )
+        assert rules_of(lint_source(src)) == ["missing-tenant"]
+
+    def test_negative_tenant_kwarg(self):
+        src = (
+            "def place(pool, tids):\n"
+            "    pool.try_allocate_many(pids, tenants=tids)\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_positional_arity_covers_tenant(self):
+        src = (
+            "def place(pool, tid):\n"
+            "    pool.allocate(pid, ptype, flags, tid)\n"
+        )
+        assert lint_source(src) == []
+
+    def test_negative_no_tenant_context(self):
+        # single-tenant code paths are allowed to allocate bare
+        src = (
+            "def warmup(pool):\n"
+            "    pool.allocate(1)\n"
+        )
+        assert lint_source(src) == []
+
+
+# --------------------------------------------------------------------- #
+# assert-host-sync
+# --------------------------------------------------------------------- #
+class TestAssertHostSync:
+    def test_assert_item(self):
+        src = (
+            "def check(x):\n"
+            "    assert x.sum().item() == 0\n"
+        )
+        assert rules_of(lint_source(src)) == ["assert-host-sync"]
+
+    def test_negative_plain_assert(self):
+        src = (
+            "def check(n):\n"
+            "    assert n == 0\n"
+        )
+        assert lint_source(src) == []
+
+
+# --------------------------------------------------------------------- #
+# suppression mechanics
+# --------------------------------------------------------------------- #
+class TestSuppression:
+    SRC = (
+        "def check(x):\n"
+        "    assert x.sum().item() == 0\n"
+    )
+
+    def test_inline_suppression(self):
+        src = self.SRC.replace(
+            "== 0", "== 0  # repro-lint: disable=assert-host-sync"
+        )
+        assert lint_source(src) == []
+
+    def test_line_above_suppression(self):
+        src = (
+            "def check(x):\n"
+            "    # repro-lint: disable=assert-host-sync (intended)\n"
+            "    assert x.sum().item() == 0\n"
+        )
+        assert lint_source(src) == []
+
+    def test_bare_disable_suppresses_all(self):
+        src = self.SRC.replace("== 0", "== 0  # repro-lint: disable")
+        assert lint_source(src) == []
+
+    def test_wrong_rule_does_not_suppress(self):
+        src = self.SRC.replace(
+            "== 0", "== 0  # repro-lint: disable=jit-host-sync"
+        )
+        assert rules_of(lint_source(src)) == ["assert-host-sync"]
+
+
+# --------------------------------------------------------------------- #
+# harness / CLI
+# --------------------------------------------------------------------- #
+class TestHarness:
+    def test_finding_format(self):
+        fs = lint_source("def f(pool):\n    return pool.qos\n", path="x.py")
+        assert str(fs[0]).startswith("x.py:2:")
+        assert "removed-pool-qos" in str(fs[0])
+
+    def test_syntax_error_is_a_finding(self):
+        fs = lint_source("def f(:\n", path="broken.py")
+        assert len(fs) == 1
+        assert fs[0].rule == "syntax-error"
+
+    def test_list_rules(self, capsys):
+        assert main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rule in RULES:
+            assert rule in out
+
+    def test_main_exit_codes(self, tmp_path, capsys):
+        clean = tmp_path / "clean.py"
+        clean.write_text("def f():\n    return 1\n")
+        dirty = tmp_path / "dirty.py"
+        dirty.write_text("def f(pool):\n    return pool.qos\n")
+        assert main([str(clean)]) == 0
+        capsys.readouterr()
+        assert main([str(dirty)]) == 1
+        out = capsys.readouterr()
+        assert "removed-pool-qos" in out.out
+
+    def test_repo_is_clean(self):
+        """The CI gate: every rule is either exercised by the unit
+        cases above or proven clean against the real codebase here."""
+        roots = [os.path.join(REPO, d)
+                 for d in ("src", "benchmarks", "examples")]
+        findings = lint_paths(roots)
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+    def test_cli_module_entrypoint(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis.repro_lint",
+             os.path.join(REPO, "src")],
+            capture_output=True, text=True, env=env,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "clean" in proc.stderr

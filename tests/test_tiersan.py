@@ -1,0 +1,290 @@
+"""TierSan leveled sanitizer tests: clean runs pass, injected
+corruptions are caught with actionable messages.
+
+Each corruption class maps to the cheapest level that detects it:
+
+* conservation — frame/vmstat/ledger conservation laws (safe to leave
+  on in long runs);
+* full — the exact structural audits (``check_invariants`` +
+  ``check_consistency``) that catch corruptions conservation cannot
+  see, like a double-mapped frame that keeps all the counts balanced.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analysis.tiersan import (
+    TierSan,
+    TierSanError,
+    diff_engines,
+    tiersan_from_env,
+)
+from repro.core import (
+    PagePool,
+    PageType,
+    Tier,
+    TieredSimulator,
+    TppConfig,
+    VectorPagePool,
+    make_trace,
+)
+from repro.qos import QosConfig
+
+ENGINES = ("reference", "vectorized")
+
+
+def make_pool(engine, fast=16, slow=16):
+    cls = PagePool if engine == "reference" else VectorPagePool
+    pool = cls(fast, slow)
+    pids = [pool.allocate(PageType.ANON).pid for _ in range(10)]
+    for pid in pids[:4]:
+        pool.touch(pid)
+    pool.end_interval()
+    return pool, pids
+
+
+def fast_pids(pool, pids):
+    return [p for p in pids if pool.tier_of(p) == Tier.FAST]
+
+
+def run_qos_sim(engine, steps=20):
+    sim = TieredSimulator(
+        "web+cache1", "tpp", 200, 800, seed=7,
+        trace=make_trace("web+cache1", seed=7, total_pages=500),
+        engine=engine,
+        qos=QosConfig(classes=("latency_critical", "standard")),
+    )
+    sim.run(steps, measure_from=5)
+    return sim
+
+
+# --------------------------------------------------------------------- #
+# clean pools pass at every level
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+def test_clean_pool_passes_all_levels(engine):
+    pool, _ = make_pool(engine)
+    TierSan("conservation").check(pool)
+    TierSan("full").check(pool, full=True)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_clean_qos_run_passes_full(engine):
+    sim = run_qos_sim(engine)
+    TierSan("full").check(sim.pool, full=True)
+
+
+def test_unknown_level_rejected():
+    with pytest.raises(ValueError, match="level"):
+        TierSan("paranoid")
+
+
+# --------------------------------------------------------------------- #
+# conservation-level catches: frame accounting, vmstat flow, ledger
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+def test_duplicate_free_push_caught(engine, request):
+    pool, pids = make_pool(engine)
+    frame = (pool._frame[fast_pids(pool, pids)[0]]
+             if engine == "vectorized"
+             else pool.pages[fast_pids(pool, pids)[0]].frame)
+    if engine == "vectorized":
+        pool._stacks[Tier.FAST].push(int(frame))
+    else:
+        pool._free[Tier.FAST].append(int(frame))
+    with pytest.raises(TierSanError, match=r"\[frame-accounting\]") as exc:
+        TierSan("conservation").check(pool)
+    assert "hint:" in str(exc.value)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_vmstat_flow_violation_caught(engine):
+    pool, _ = make_pool(engine)
+    pool.vmstat.pgfree += 5  # frees that never returned frames
+    with pytest.raises(TierSanError, match=r"\[vmstat-flow\]") as exc:
+        TierSan("conservation").check(pool)
+    assert "pgalloc" in str(exc.value)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_vmstat_monotonicity_caught(engine):
+    pool, _ = make_pool(engine)
+    san = TierSan("conservation")
+    san.check(pool)  # snapshot counters
+    pool.vmstat.pgactivate -= 1  # a counter went backwards
+    with pytest.raises(TierSanError, match=r"\[vmstat-monotone\]") as exc:
+        san.check(pool)
+    assert "pgactivate" in str(exc.value)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_ledger_drift_caught(engine):
+    sim = run_qos_sim(engine)
+    ctl = sim.pool.control
+    ctl.fast_pages[0] += 10_000  # gross drift: more pages than frames
+    with pytest.raises(TierSanError, match=r"\[ledger-bounds\]"):
+        TierSan("conservation").check(sim.pool)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_small_ledger_drift_needs_full(engine):
+    """Drift of one page keeps every conservation bound satisfied; only
+    the exact full audit (check_consistency) can see it."""
+    sim = run_qos_sim(engine)
+    ctl = sim.pool.control
+    ctl.fast_pages[0] -= 1
+    san = TierSan("full")
+    san.check(sim.pool)  # conservation-only pass stays quiet
+    with pytest.raises(TierSanError, match=r"\[full-audit\]") as exc:
+        san.check(sim.pool, full=True)
+    assert "check_consistency" in str(exc.value)
+
+
+# --------------------------------------------------------------------- #
+# full-level catches: structural corruptions conservation cannot see
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+def test_double_mapped_frame_caught_by_full(engine):
+    pool, pids = make_pool(engine)
+    a, b = fast_pids(pool, pids)[:2]
+    if engine == "vectorized":
+        pool._frame[b] = pool._frame[a]
+    else:
+        pool.pages[b].frame = pool.pages[a].frame
+    san = TierSan("full")
+    san.check(pool)  # all counts still balance
+    with pytest.raises(TierSanError, match="double-mapped") as exc:
+        san.check(pool, full=True)
+    assert "[full-audit]" in str(exc.value)
+
+
+def test_lru_length_mismatch_caught_by_full_vectorized():
+    pool, _ = make_pool("vectorized")
+    pool._lens[0] += 1  # FAST/ANON/inactive claims one extra member
+    san = TierSan("full")
+    san.check(pool)
+    with pytest.raises(TierSanError, match="length"):
+        san.check(pool, full=True)
+
+
+def test_lru_membership_break_caught_by_full_reference():
+    pool, pids = make_pool("reference")
+    victim = fast_pids(pool, pids)[0]
+    page = pool.pages[victim]
+    pool.lru[Tier.FAST].discard(victim, page.page_type)  # drop, keep flags
+    with pytest.raises(TierSanError, match="membership"):
+        TierSan("full").check(pool, full=True)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_error_message_is_actionable(engine):
+    pool, _ = make_pool(engine)
+    pool.vmstat.pgfree += 5
+    with pytest.raises(TierSanError) as exc:
+        TierSan("conservation").check(pool)
+    msg = str(exc.value)
+    assert f"on {type(pool).__name__}" in msg
+    assert "violation(s)" in msg and "hint:" in msg
+    assert "TierSan[conservation] check #1" in msg
+
+
+# --------------------------------------------------------------------- #
+# interval hook, levels, env wiring
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+def test_end_interval_runs_attached_sanitizer(engine):
+    pool, _ = make_pool(engine)
+    pool.tiersan = TierSan("conservation")
+    pool.vmstat.pgfree += 5
+    with pytest.raises(TierSanError):
+        pool.end_interval()
+
+
+def test_every_throttles_checks():
+    pool, _ = make_pool("vectorized")
+    pool.vmstat.pgfree += 5
+    san = TierSan("conservation", every=3)
+    san.on_interval(pool)
+    san.on_interval(pool)
+    assert san.checks == 0
+    with pytest.raises(TierSanError):
+        san.on_interval(pool)
+    assert san.checks == 1
+
+
+def test_off_level_never_checks():
+    pool, _ = make_pool("reference")
+    pool.vmstat.pgfree += 5
+    san = TierSan("off")
+    for _ in range(3):
+        san.on_interval(pool)
+    assert san.checks == 0
+
+
+def test_env_attach(monkeypatch):
+    monkeypatch.delenv("TIERSAN_LEVEL", raising=False)
+    assert PagePool(8, 8).tiersan is None
+    monkeypatch.setenv("TIERSAN_LEVEL", "0")
+    assert VectorPagePool(8, 8).tiersan is None
+    monkeypatch.setenv("TIERSAN_LEVEL", "conservation")
+    assert PagePool(8, 8).tiersan.level == "conservation"
+    monkeypatch.setenv("TIERSAN_LEVEL", "full")
+    monkeypatch.setenv("TIERSAN_EVERY", "4")
+    san = VectorPagePool(8, 8).tiersan
+    assert san.level == "full" and san.every == 4
+    monkeypatch.setenv("TIERSAN_LEVEL", "paranoid")
+    with pytest.raises(ValueError, match="level"):
+        tiersan_from_env()
+
+
+def test_env_attached_full_catches_corruption(monkeypatch):
+    monkeypatch.setenv("TIERSAN_LEVEL", "full")
+    pool = VectorPagePool(16, 16)
+    pids = [pool.allocate(PageType.ANON).pid for _ in range(6)]
+    pool._lens[0] += 1
+    with pytest.raises(TierSanError):
+        pool.end_interval()
+
+
+# --------------------------------------------------------------------- #
+# differential engine diff
+# --------------------------------------------------------------------- #
+def run_pair(steps=20):
+    out = []
+    for engine in ENGINES:
+        sim = TieredSimulator(
+            "web+cache1", "tpp", 100, 400, seed=11,
+            trace=make_trace("web+cache1", seed=11, total_pages=300),
+            engine=engine,
+        )
+        sim.run(steps, measure_from=5)
+        out.append(sim.pool)
+    return out
+
+
+class TestDiffEngines:
+    def test_parity_run_diffs_empty(self):
+        ref, vec = run_pair()
+        assert diff_engines(ref, vec) == {}
+        assert diff_engines(vec, ref) == {}  # arg order auto-normalized
+
+    def test_vmstat_divergence_reported(self):
+        ref, vec = run_pair()
+        vec.vmstat.pgfree += 1
+        diff = diff_engines(ref, vec)
+        assert list(diff) == ["vmstat"]
+        assert any("pgfree" in line for line in diff["vmstat"])
+
+    def test_page_state_divergence_reported(self):
+        ref, vec = run_pair()
+        pid = int(np.flatnonzero(vec._live[: vec._next_pid])[0])
+        vec._touch_count[pid] += 1
+        diff = diff_engines(ref, vec)
+        assert "pages" in diff
+        assert any(str(pid) in line for line in diff["pages"])
+
+    def test_frame_divergence_reported(self):
+        ref, vec = run_pair()
+        vec.step += 1
+        diff = diff_engines(ref, vec)
+        assert "frames" in diff
