@@ -37,6 +37,7 @@ MODULES = [
     ("engine", "benchmarks.engine_bench", True, "run"),
     ("qos", "benchmarks.qos_bench", False, "run"),
     ("qos_controller", "benchmarks.qos_bench", False, "run_controller"),
+    ("fleet", "benchmarks.fleet_bench", False, "run"),
     ("serving", "benchmarks.serving_bench", True, "run"),
     ("kernels", "benchmarks.kernel_bench", False, "run"),
     ("roofline", "benchmarks.roofline", True, "run"),

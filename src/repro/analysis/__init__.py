@@ -26,6 +26,7 @@ from repro.analysis.plan_verify import (  # noqa: F401
 from repro.analysis.tiersan import (  # noqa: F401
     TierSan,
     TierSanError,
+    check_fleet_conservation,
     diff_engines,
     tiersan_from_env,
 )

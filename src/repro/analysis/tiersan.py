@@ -235,6 +235,71 @@ class TierSan:
         return errs
 
 
+def check_fleet_conservation(coordinator) -> None:
+    """TierSan's fleet law: one global budget, conserved across shards.
+
+    Given a :class:`~repro.fleet.coordinator.FleetCoordinator`, verify
+    the cross-shard budget invariants the push-down path must preserve:
+
+    * ``sum(shard budgets) == global_budget`` exactly — the coordinator
+      may move frames between shards but never mint or leak them;
+    * every shard budget respects its clamps
+      (``min_budget <= budget <= physical_fast``);
+    * each shard's *pool* agrees (``pool.fast_budget`` matches, and the
+      watermarks are exactly ``frames_for_budget(physical, budget)``) —
+      a budget that never reached the watermarks is a silent no-op;
+    * each quota-keeping *control* agrees (``fast_frames == budget``) —
+      quotas divided over a stale capacity drift from the watermarks.
+
+    Raises :class:`TierSanError` listing every violated law.
+    """
+    errs: List[str] = []
+    budgets = [int(p.budget) for p in coordinator.pools]
+    if sum(budgets) != coordinator.global_budget:
+        errs.append(
+            f"[fleet-conservation] shard budgets sum to {sum(budgets)} != "
+            f"global budget {coordinator.global_budget}; hint: a push "
+            "skipped a shard, or a shard's budget was mutated outside "
+            "the coordinator"
+        )
+    lo = coordinator.config.min_budget
+    for p, b in zip(coordinator.pools, budgets):
+        if not lo <= b <= p.physical_fast:
+            errs.append(
+                f"[fleet-clamps] {p.key}: budget {b} outside "
+                f"[{lo}, {p.physical_fast}]; hint: division clamps bypassed"
+            )
+            continue
+        pool_budget = getattr(p.pool, "fast_budget", None)
+        if pool_budget != b:
+            errs.append(
+                f"[fleet-pushdown] {p.key}: shard budget {b} but "
+                f"pool.fast_budget={pool_budget}; hint: apply_budget "
+                "bypassed pool.set_fast_budget"
+            )
+        expected = p.pool.config.frames_for_budget(p.physical_fast, b)
+        actual = (p.pool.wm_min, p.pool.wm_alloc, p.pool.wm_demote)
+        if actual != expected:
+            errs.append(
+                f"[fleet-pushdown] {p.key}: watermarks {actual} != "
+                f"frames_for_budget({p.physical_fast}, {b})={expected}; "
+                "hint: watermarks were overwritten after the push-down"
+            )
+        ctl_frames = getattr(p.control, "fast_frames", None)
+        if ctl_frames is not None and int(ctl_frames) != b:
+            errs.append(
+                f"[fleet-pushdown] {p.key}: control.fast_frames="
+                f"{int(ctl_frames)} but budget {b}; hint: the control "
+                "missed its set_fast_budget forward"
+            )
+    if errs:
+        detail = "\n  - ".join(errs)
+        raise TierSanError(
+            f"TierSan[fleet] on {len(coordinator.pools)} shards: "
+            f"{len(errs)} violation(s)\n  - {detail}"
+        )
+
+
 def tiersan_from_env(env=None) -> Optional[TierSan]:
     """Build a :class:`TierSan` from ``TIERSAN_LEVEL``/``TIERSAN_EVERY``
     (``None`` when disabled) — called by both pool constructors."""

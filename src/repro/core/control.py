@@ -111,6 +111,16 @@ class TieringControl:
     def refund_promotion(self, pid: int) -> None:
         """Undo an admission whose migration then failed (no free frame)."""
 
+    # -------------------------- fleet budget push-down ----------------- #
+    def set_fast_budget(self, budget: int) -> None:
+        """The host's fast-tier budget changed (fleet coordinator).
+
+        Quota-keeping controls re-divide their tenant shares over the
+        new capacity; stateless controls ignore it.  Driven by
+        ``pool.set_fast_budget`` so one push-down call updates the
+        watermarks and the ledger together.
+        """
+
     # -------------------------- lifecycle notes ----------------------- #
     def note_alloc(self, pid: int, tenant: int, tier: int) -> None:
         """A page was allocated (scalar path)."""

@@ -198,6 +198,9 @@ class VectorPagePool:
         # disabled path bit-identical to a control-free pool.
         self.control: TieringControl = NULL_CONTROL
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
+        # Host-local fast-tier budget (fleet control plane); defaults to
+        # the physical capacity, i.e. no reservation.
+        self.fast_budget = num_fast
         # Runtime invariant sanitizer (TIERSAN_LEVEL=conservation|full);
         # None when disabled — zero overhead on the interval path.
         self.tiersan = tiersan_from_env()
@@ -330,6 +333,24 @@ class VectorPagePool:
 
     def under_min_watermark(self) -> bool:
         return self.free_frames(Tier.FAST) <= self.wm_min
+
+    def set_fast_budget(self, budget: int) -> None:
+        """Apply a fast-tier budget push-down (fleet coordinator).
+
+        The budget lands as a watermark update — ``num_fast - budget``
+        frames become a standing reservation above the usual min/alloc/
+        demote levels, so background reclaim shrinks (or regrows) the
+        effective fast tier to ``budget`` frames over the next
+        intervals — and is forwarded to the attached control so a
+        quota-keeping arbiter re-divides its tenant shares over the new
+        capacity.  ``budget == num_fast`` restores the unbudgeted
+        watermarks exactly.
+        """
+        self.wm_min, self.wm_alloc, self.wm_demote = (
+            self.config.frames_for_budget(self.num_frames[Tier.FAST], budget)
+        )
+        self.fast_budget = int(budget)
+        self.control.set_fast_budget(budget)
 
     # ------------------------------------------------------------------ #
     # allocation

@@ -108,6 +108,9 @@ class PagePool:
         # SLO feedback (SlowdownController) implementations.
         self.control: TieringControl = NULL_CONTROL
         self.wm_min, self.wm_alloc, self.wm_demote = self.config.frames(num_fast)
+        # Host-local fast-tier budget (fleet control plane); defaults to
+        # the physical capacity, i.e. no reservation.
+        self.fast_budget = num_fast
         # Runtime invariant sanitizer (TIERSAN_LEVEL=conservation|full);
         # None when disabled — zero overhead on the interval path.
         self.tiersan = tiersan_from_env()
@@ -130,6 +133,20 @@ class PagePool:
 
     def under_min_watermark(self) -> bool:
         return self.free_frames(Tier.FAST) <= self.wm_min
+
+    def set_fast_budget(self, budget: int) -> None:
+        """Apply a fast-tier budget push-down (fleet coordinator).
+
+        Same semantics as ``VectorPagePool.set_fast_budget`` — the
+        budget lands as a watermark update reserving the frames beyond
+        it, and is forwarded to the attached control so a quota-keeping
+        arbiter re-divides its tenant shares over the new capacity.
+        """
+        self.wm_min, self.wm_alloc, self.wm_demote = (
+            self.config.frames_for_budget(self.num_frames[Tier.FAST], budget)
+        )
+        self.fast_budget = int(budget)
+        self.control.set_fast_budget(budget)
 
     # ------------------------------------------------------------------ #
     # allocation (§5.2, §5.4)

@@ -267,6 +267,15 @@ class TieredSimulator:
             self._per_tenant[tid] = acc
         return acc
 
+    def tenant_counters(self) -> Dict[int, Dict[str, int]]:
+        """Copy of the cumulative per-tenant vmstat attribution.
+
+        Counters accumulate across chunked ``run()`` calls, so a caller
+        (e.g. the fleet simulator) can snapshot here and diff later to
+        measure an arbitrary window.
+        """
+        return {t: dict(acc) for t, acc in self._per_tenant.items()}
+
     # ---------------------------------------------------------------- #
     def run(self, steps: int, measure_from: int = 0) -> SimResult:
         """Run ``steps``; throughput accounting starts at ``measure_from``.

@@ -116,6 +116,29 @@ class TppConfig:
         de = max(al + 1, int(self.wm_demote * num_fast))
         return lo, al, de
 
+    def frames_for_budget(
+        self, num_fast: int, budget: int
+    ) -> tuple[int, int, int]:
+        """Watermarks enforcing a fast-tier *budget* < physical capacity.
+
+        A fleet coordinator pushes a host's share of the global fast-tier
+        budget down as a watermark update: the ``num_fast - budget``
+        frames beyond the budget are reserved (always kept free), and the
+        usual min/alloc/demote fractions apply to the budgeted capacity.
+        Background reclaim then parks free frames at
+        ``reserved + frames(budget).demote``, so the pool's *effective*
+        fast tier is exactly ``budget`` frames; ``budget == num_fast``
+        reproduces :meth:`frames` bit-for-bit (no reservation).
+        """
+        if not 4 <= budget <= num_fast:
+            raise ValueError(
+                f"fast budget {budget} outside [4, {num_fast}] "
+                "(watermarks need >= 4 budgeted frames)"
+            )
+        reserved = num_fast - budget
+        lo, al, de = self.frames(budget)
+        return lo + reserved, al + reserved, de + reserved
+
 
 # Failure reasons for promotion attempts (§5.5 observability).
 class PromoteFail(enum.IntEnum):

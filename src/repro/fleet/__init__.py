@@ -1,0 +1,61 @@
+"""Fleet-scale multi-host tiering: sharded pools + a global control plane.
+
+One rack of CXL-tiered hosts shares an economic reality the single-host
+control plane cannot see: the *fleet* buys a fixed amount of fast
+memory, and TPP (§7 "fleet-wide deployment") provisions it per host
+ahead of time.  A host whose latency-critical tenants are deep in slow
+memory cannot borrow headroom from a neighbor whose batch jobs are
+coasting.  This package closes that loop in simulation:
+
+* :class:`~repro.fleet.shard.ShardPool` /
+  :class:`~repro.fleet.shard.HostShard` — wrap one page pool (+ its
+  :class:`~repro.core.control.TieringControl`) as a fleet-manageable
+  unit: a host-local fast-tier budget applied through
+  ``pool.set_fast_budget`` (watermark push-down) and a telemetry window
+  diffed from the control ledger's cumulative counters.
+* :class:`~repro.fleet.coordinator.FleetCoordinator` — divides ONE
+  global fast-tier budget across every (host, pool) shard with the same
+  Equilibria-style proportional law the per-host slowdown controller
+  uses (:func:`~repro.qos.controller.proportional_share_update` — one
+  law, two altitudes), then pushes integer budgets down as watermark +
+  quota updates.  ``sum(budgets) == global_budget`` exactly, always
+  (TierSan's fleet conservation law).
+* :class:`~repro.fleet.simulator.FleetSimulator` — drives N host
+  shards from per-host-seeded copies of a shared workload mix, with a
+  ``greedy`` (static per-host split) vs ``coordinated`` (periodic
+  re-division) mode switch; ``benchmarks/fleet_bench.py`` shows the
+  coordinated fleet beating greedy on aggregate latency-critical
+  slowdown at the same global budget.
+* :mod:`~repro.fleet.mesh` — the CPU-only multi-host mesh smoke path:
+  per-host telemetry rows all-reduced with ``jax.lax.psum`` over
+  ``--xla_force_host_platform_device_count`` devices, numpy-verified.
+"""
+
+from repro.fleet.coordinator import FleetCoordinator, FleetCoordinatorConfig
+from repro.fleet.mesh import (
+    host_device_count,
+    mesh_reduce_telemetry,
+    request_host_devices,
+)
+from repro.fleet.shard import HostShard, ShardPool, ShardTelemetry
+from repro.fleet.simulator import (
+    FleetHostSpec,
+    FleetPoolSpec,
+    FleetResult,
+    FleetSimulator,
+)
+
+__all__ = [
+    "FleetCoordinator",
+    "FleetCoordinatorConfig",
+    "FleetHostSpec",
+    "FleetPoolSpec",
+    "FleetResult",
+    "FleetSimulator",
+    "HostShard",
+    "ShardPool",
+    "ShardTelemetry",
+    "host_device_count",
+    "mesh_reduce_telemetry",
+    "request_host_devices",
+]

@@ -1,0 +1,104 @@
+"""CPU-only multi-host mesh smoke path for fleet telemetry.
+
+A real fleet coordinator all-reduces per-host telemetry over the
+network.  The simulation's stand-in is a jax host mesh with one device
+per host: per-host telemetry rows are summed with ``jax.lax.psum``
+across a ``pmap``, so the aggregation *pattern* (every host computes the
+identical global row) is exercised even though everything runs in one
+process.
+
+CI has no accelerators, so the mesh rides on XLA's host-platform trick:
+setting ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before
+jax's first import* splits the CPU into N devices.
+:func:`request_host_devices` does exactly that (and reports honestly
+when it is too late), and ``tests/conftest.py`` applies it up front so
+the smoke path runs on CPU-only CI.
+
+Everything degrades gracefully: no jax, too few devices, or a
+mismatched reduction → ``None``, and callers (the coordinator's
+``use_mesh`` aggregate) fall back to plain numpy.  The tests assert the
+mesh result is numerically identical to the numpy sum.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional
+
+import numpy as np
+
+#: The XLA flag that splits the host platform into N CPU devices.
+XLA_HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def request_host_devices(n: int, env=None) -> bool:
+    """Arrange for ``n`` host (CPU) devices, if still possible.
+
+    Must run before jax's first import in the process (XLA reads the
+    flag once at backend init).  Returns True when the flag is (now)
+    set, False when jax is already imported without it — callers should
+    then treat the mesh as unavailable rather than half-configured.
+    An existing ``{XLA_HOST_DEVICE_FLAG}`` in ``XLA_FLAGS`` is honored
+    untouched.
+    """
+    env = os.environ if env is None else env
+    flags = env.get("XLA_FLAGS", "")
+    if XLA_HOST_DEVICE_FLAG in flags:
+        return True
+    if "jax" in sys.modules:
+        return False
+    env["XLA_FLAGS"] = f"{flags} {XLA_HOST_DEVICE_FLAG}={int(n)}".strip()
+    return True
+
+
+def host_device_count() -> int:
+    """Devices the mesh can span (0 when jax is unavailable)."""
+    try:
+        import jax
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return 0
+    try:
+        return int(jax.local_device_count())
+    except Exception:  # pragma: no cover - backend init failure
+        return 0
+
+
+def mesh_reduce_telemetry(per_host: np.ndarray) -> Optional[np.ndarray]:
+    """All-reduce per-host telemetry rows across a one-device-per-host mesh.
+
+    ``per_host`` is ``(n_hosts, k)`` (a 1-D vector is treated as one
+    row per host, k = 1).  Each host's row is placed on its own device
+    and summed with ``psum``; every device then holds the identical
+    global row, and that row is returned as float64.  Returns ``None``
+    when jax or enough devices are unavailable — callers fall back to
+    ``per_host.sum(axis=0)``, which is numerically the same reduction.
+    """
+    rows = np.asarray(per_host, np.float64)
+    if rows.ndim == 1:
+        rows = rows[:, None]
+    if rows.ndim != 2 or rows.shape[0] < 1:
+        raise ValueError(
+            f"per_host telemetry must be (n_hosts, k), got {rows.shape}"
+        )
+    try:
+        import jax
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return None
+    n = rows.shape[0]
+    try:
+        devices = jax.local_devices()
+    except Exception:  # pragma: no cover - backend init failure
+        return None
+    if len(devices) < n:
+        return None
+    reduced = jax.pmap(
+        lambda x: jax.lax.psum(x, "hosts"),
+        axis_name="hosts",
+        devices=devices[:n],
+    )(rows)
+    reduced = np.asarray(reduced, np.float64)
+    # the mesh invariant: every host computed the same global row
+    if not np.allclose(reduced, reduced[0]):  # pragma: no cover
+        return None
+    return reduced[0]

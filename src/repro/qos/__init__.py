@@ -35,6 +35,7 @@ from repro.qos.controller import (
     DEFAULT_SLO,
     SlowdownController,
     SlowdownControllerConfig,
+    proportional_share_update,
 )
 from repro.qos.quota import (
     DEFAULT_PRIORITY,
@@ -78,6 +79,7 @@ __all__ = [
     "class_weights",
     "dynamic_quotas",
     "make_control",
+    "proportional_share_update",
     "static_quotas",
     "token_refill",
 ]

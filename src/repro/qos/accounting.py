@@ -62,6 +62,11 @@ class TenantAccounting(TieringControl):
         self.access_interval = np.zeros(n, np.int64)
         self.access_fast_interval = np.zeros(n, np.int64)
         self.access_slow_interval = np.zeros(n, np.int64)
+        # Cumulative tier-split access totals (never reset): the fleet
+        # coordinator snapshots these between ticks, so its measurement
+        # window is independent of the interval cadence.
+        self.access_fast_total = np.zeros(n, np.int64)
+        self.access_slow_total = np.zeros(n, np.int64)
         self.hot_ewma = np.zeros(n, np.float64)
         self.intervals = 0
 
@@ -89,7 +94,8 @@ class TenantAccounting(TieringControl):
         for name in ("fast_pages", "slow_pages", "promoted_total",
                      "demoted_total", "promoted_interval", "demoted_interval",
                      "access_interval", "access_fast_interval",
-                     "access_slow_interval"):
+                     "access_slow_interval", "access_fast_total",
+                     "access_slow_total"):
             setattr(self, name, np.concatenate(
                 [getattr(self, name), np.zeros(pad, np.int64)]))
         self.hot_ewma = np.concatenate(
@@ -221,6 +227,8 @@ class TenantAccounting(TieringControl):
         """Fold one step's per-tenant access counts (split by tier)."""
         self.access_fast_interval += fast_counts
         self.access_slow_interval += slow_counts
+        self.access_fast_total += fast_counts
+        self.access_slow_total += slow_counts
         self.access_interval += fast_counts
         self.access_interval += slow_counts
 
@@ -251,6 +259,21 @@ class TenantAccounting(TieringControl):
     # ---------------------------------------------------------------- #
     # introspection
     # ---------------------------------------------------------------- #
+    def fleet_telemetry(self) -> Dict[str, np.ndarray]:
+        """Cumulative per-tenant counters for a fleet-coordinator tick.
+
+        Every array is a copy (safe to snapshot and diff across ticks);
+        subclasses extend with their arbitration counters.
+        """
+        return {
+            "access_fast": self.access_fast_total.copy(),
+            "access_slow": self.access_slow_total.copy(),
+            "promoted": self.promoted_total.copy(),
+            "demoted": self.demoted_total.copy(),
+            "fast_pages": self.fast_pages.copy(),
+            "slow_pages": self.slow_pages.copy(),
+        }
+
     def residency(self) -> Dict[int, Dict[str, int]]:
         return {
             t: {"fast": int(self.fast_pages[t]), "slow": int(self.slow_pages[t])}

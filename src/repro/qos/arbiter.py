@@ -110,6 +110,22 @@ class QosArbiter(TenantAccounting):
         self._rebuild_shares()
         self.tokens = np.concatenate([old_tokens, self._burst[-pad:]])
 
+    def set_fast_budget(self, budget: int) -> None:
+        """Re-divide tenant quotas over a new host fast-tier budget.
+
+        The fleet coordinator pushes a host's share of the global
+        fast-tier budget down mid-run; the quota ledger re-divides its
+        shares over the new capacity and clips token buckets to the
+        rebuilt burst so no tenant keeps promotion credit earned against
+        a larger tier.  Residency/migration counters are untouched — a
+        budget change never rewrites history, only future admissions.
+        """
+        if budget < 1:
+            raise ValueError(f"fast budget must be >= 1 (got {budget})")
+        self.fast_frames = int(budget)
+        self._rebuild_shares()
+        self.tokens = np.minimum(self.tokens, self._burst)
+
     def configure_tenant(self, tenant: int, qos_class: str) -> None:
         """Assign (or reassign) a tenant's priority class."""
         if qos_class not in self.config.priority:
@@ -284,8 +300,15 @@ class QosArbiter(TenantAccounting):
     # ---------------------------------------------------------------- #
     # observability
     # ---------------------------------------------------------------- #
-    #: Per-interval decision records retained (oldest dropped beyond this).
+    #: Default per-interval decision records retained (oldest dropped
+    #: beyond this); override per run via ``QosConfig.timeline_max``.
     TIMELINE_MAX = 512
+
+    @property
+    def timeline_max(self) -> int:
+        """The effective decision-timeline bound for this arbiter."""
+        cfg = self.config.timeline_max
+        return int(cfg) if cfg is not None else int(self.TIMELINE_MAX)
 
     def _record_interval(self) -> None:
         """Append this interval's decision deltas to the timeline.
@@ -312,8 +335,22 @@ class QosArbiter(TenantAccounting):
         entry["shares"] = [round(float(s), 4) for s in shares]
         self._tl_prev = cur
         self.timeline.append(entry)
-        if len(self.timeline) > self.TIMELINE_MAX:
-            del self.timeline[: len(self.timeline) - self.TIMELINE_MAX]
+        limit = self.timeline_max
+        if len(self.timeline) > limit:
+            del self.timeline[: len(self.timeline) - limit]
+
+    def fleet_telemetry(self) -> Dict[str, np.ndarray]:
+        """Ledger counters + arbitration deltas for a coordinator tick."""
+        out = super().fleet_telemetry()
+        out.update({
+            "denied_quota": self.denied_quota.copy(),
+            "denied_token": self.denied_token.copy(),
+            "steered_total": int(self.steered_total),
+            "shed_total": int(self.shed_total),
+            "classes": list(self.classes),
+            "quota": self.quota.copy(),
+        })
+        return out
 
     def qos_summary(self) -> Optional[Dict]:
         return {

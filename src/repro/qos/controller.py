@@ -57,6 +57,30 @@ DEFAULT_SLO: Dict[str, float] = {
 }
 
 
+def proportional_share_update(
+    shares: np.ndarray,
+    measured: np.ndarray,
+    targets: np.ndarray,
+    gain: float,
+    floor: float,
+) -> np.ndarray:
+    """One Equilibria-style proportional step on a fair-share vector.
+
+    Each share is scaled by its relative SLO error
+    (``1 + gain * (measured/target - 1)``, clipped at 0.05 so one
+    wildly-off entry cannot zero a share in a single step), renormalized,
+    floored at ``floor`` and renormalized again.  This is the control
+    law of :class:`SlowdownController` (per-tenant shares of one host's
+    fast tier) and of the fleet coordinator
+    (:class:`~repro.fleet.coordinator.FleetCoordinator`, per-shard-pool
+    shares of the global fast-tier budget) — one law, two altitudes.
+    """
+    err = measured / targets - 1.0
+    shares = shares * np.maximum(1.0 + gain * err, 0.05)
+    shares = np.maximum(shares / shares.sum(), floor)
+    return shares / shares.sum()
+
+
 @dataclasses.dataclass(frozen=True)
 class SlowdownControllerConfig:
     """Tunables of the slowdown controller.
@@ -181,10 +205,10 @@ class SlowdownController(QosArbiter):
 
         TenantAccounting.note_interval(self)
         # proportional update on the relative SLO error, renormalized
-        err = self.slowdown_ewma / self.targets - 1.0
-        shares = self.shares * np.maximum(1.0 + self.ctrl.gain * err, 0.05)
-        shares = np.maximum(shares / shares.sum(), self.ctrl.share_floor)
-        self.shares = shares / shares.sum()
+        self.shares = proportional_share_update(
+            self.shares, self.slowdown_ewma, self.targets,
+            self.ctrl.gain, self.ctrl.share_floor,
+        )
         self.quota = self._quotas_from_shares()
         self._refill = token_refill(self.config, self.shares)
         self._burst = self.config.token_burst * np.maximum(self._refill, 1.0)

@@ -65,6 +65,11 @@ class QosConfig:
       per-tenant token-bucket refill).
     * ``token_burst`` — bucket capacity as a multiple of the tenant's
       per-interval refill.
+    * ``timeline_max`` — decision-timeline entries retained (oldest
+      dropped beyond this).  The fleet coordinator consumes the
+      timeline, so long fleet runs need a bound sized to their
+      coordination horizon; ``None`` keeps the arbiter's default
+      (``QosArbiter.TIMELINE_MAX``).
     """
 
     mode: str = "dynamic"
@@ -79,11 +84,16 @@ class QosConfig:
     steer_allocation: bool = True
     promote_tokens_per_interval: float = 64.0
     token_burst: float = 2.0
+    timeline_max: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.mode not in ("static", "dynamic"):
             raise ValueError(
                 f"unknown quota mode {self.mode!r}; choose static|dynamic"
+            )
+        if self.timeline_max is not None and self.timeline_max < 1:
+            raise ValueError(
+                f"timeline_max must be >= 1 (got {self.timeline_max})"
             )
         for cls in self.classes:
             if cls not in self.priority:

@@ -757,6 +757,24 @@ class ServingEngine:
         return jnp.einsum("bhd,bmlhd->bm", qm.astype(jnp.float32), means)
 
     # ---------------------------------------------------------------- #
+    def as_shard_pool(self, host: int = 0, name: str = "kv", slo=None):
+        """Register this engine's KV pool as a fleet shard.
+
+        The returned :class:`~repro.fleet.shard.ShardPool` lets a
+        :class:`~repro.fleet.coordinator.FleetCoordinator` budget the
+        KV cache's fast tier alongside other pools on the same host —
+        push-downs land through ``pool.set_fast_budget``, telemetry
+        windows come from the engine's attached control ledger (a
+        control-free engine reports on-target).  Import is lazy so
+        serving stays usable without the fleet package.
+        """
+        from repro.fleet.shard import ShardPool
+
+        return ShardPool(
+            host=host, name=name, pool=self.kv.pool,
+            control=self.control, slo=slo,
+        )
+
     def stats(self) -> Dict[str, Any]:
         vs = self.kv.pool.vmstat
         out = {

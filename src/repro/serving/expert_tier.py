@@ -153,3 +153,17 @@ class ExpertTierManager:
         for (l, e), pid in self.pid_of.items():
             out[l, e] = self.pool.pages[pid].tier == Tier.FAST
         return out
+
+    def as_shard_pool(self, host: int = 0, name: str = "experts", slo=None):
+        """Register the expert pool as a fleet shard (see
+        :meth:`repro.serving.engine.ServingEngine.as_shard_pool`); the
+        shard's modeled slow cost is the expert bank's host-gather
+        multiple.  Import is lazy so expert tiering stays usable
+        without the fleet package."""
+        from repro.fleet.shard import ShardPool
+
+        return ShardPool(
+            host=host, name=name, pool=self.pool,
+            control=self._control, slo=slo,
+            slow_cost=self.cfg.slow_cost,
+        )

@@ -1,0 +1,24 @@
+"""Shared test environment.
+
+The fleet mesh smoke path (tests/test_fleet.py) all-reduces per-host
+telemetry over a multi-device CPU mesh.  XLA reads
+``--xla_force_host_platform_device_count`` exactly once, at jax's first
+import, so the flag must land here: conftest imports before any test
+module pulls in jax, which is what lets the multi-host path run on
+CPU-only CI.
+
+The flag is gated behind ``REPRO_HOST_DEVICES`` (set by the CI
+``fleet`` lane) rather than always-on: splitting the host platform
+into N devices also splits XLA's intra-op threadpool, which perturbs
+float reduction order fleet-wide — enough to push the training
+grad-accumulation equivalence test past its 5e-5 tolerance.  Without
+the env var the mesh tests skip/fall back to the numpy reduction and
+every other test sees stock single-device numerics.
+"""
+
+import os
+
+if os.environ.get("REPRO_HOST_DEVICES"):
+    from repro.fleet.mesh import request_host_devices
+
+    request_host_devices(int(os.environ["REPRO_HOST_DEVICES"]))

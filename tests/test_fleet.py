@@ -1,0 +1,321 @@
+"""Fleet-scale tiering: shards, the global coordinator, and the mesh.
+
+Pins the load-bearing properties of ``repro.fleet``:
+
+* a single-host, single-pool, coordination-free fleet at full budget is
+  **bit-identical** to a plain :class:`TieredSimulator` run (the fleet
+  layer adds nothing until it is asked to);
+* one global fast-tier budget is conserved exactly across every
+  re-division (and TierSan's fleet law catches injected corruption);
+* per-shard trace seeding is deterministic, so greedy and coordinated
+  fleets replay identical arrival sequences;
+* the CPU multi-host mesh reduction equals the numpy reduction;
+* serving pools (KV + experts) register as fleet shards and take
+  budget push-downs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analysis import TierSanError, check_fleet_conservation
+from repro.core import TieredSimulator, Tier, TppConfig, make_trace
+from repro.fleet import (
+    FleetCoordinator,
+    FleetCoordinatorConfig,
+    FleetHostSpec,
+    FleetPoolSpec,
+    FleetSimulator,
+    ShardPool,
+    host_device_count,
+    mesh_reduce_telemetry,
+)
+from repro.qos import QosConfig
+
+WORKLOAD = "web+cache1"
+CLASSES = ("latency_critical", "batch")
+
+
+def pool_spec(name="kv", fast=96, slow=512, total_pages=500, **kw):
+    return FleetPoolSpec(
+        name=name, workload=WORKLOAD, fast_frames=fast, slow_frames=slow,
+        total_pages=total_pages, qos=QosConfig(classes=CLASSES), **kw
+    )
+
+
+def small_fleet(n_hosts=2, mode="coordinated", budget=120, **kw):
+    hosts = [FleetHostSpec(pools=(pool_spec(),)) for _ in range(n_hosts)]
+    kw = {"coordinate_every": 8, "interval_steps": 4, "seed": 7, **kw}
+    return FleetSimulator(hosts, mode=mode, global_fast_budget=budget, **kw)
+
+
+# --------------------------------------------------------------------- #
+# single-host parity: the fleet layer is a bit-identical wrapper
+# --------------------------------------------------------------------- #
+class TestSingleHostParity:
+    def test_greedy_full_budget_matches_plain_simulator(self):
+        steps, seed = 64, 7
+        fleet = FleetSimulator(
+            [FleetHostSpec(pools=(pool_spec(),))],
+            mode="greedy", coordinate_every=8, interval_steps=4, seed=seed,
+        )
+        assert fleet.global_budget == 96  # defaults to physical capacity
+        fres = fleet.run(steps)
+
+        plain = TieredSimulator(
+            WORKLOAD, "tpp", 96, 512, interval_steps=4, seed=seed,
+            trace=make_trace(WORKLOAD, seed=seed, total_pages=500),
+            engine="vectorized", qos=QosConfig(classes=CLASSES),
+        )
+        pres = plain.run(steps)
+
+        key = "h0/kv"
+        assert fres.vmstat[key] == pres.vmstat.as_dict()
+        assert fres.timelines[key]["local_fraction"] == pres.local_fraction
+        assert fres.timelines[key]["promote_rate"] == pres.promote_rate
+        assert fres.timelines[key]["demote_rate"] == pres.demote_rate
+
+    def test_chunked_stepping_requires_interval_alignment(self):
+        with pytest.raises(ValueError, match="multiple of interval_steps"):
+            small_fleet(coordinate_every=6, interval_steps=4)
+        with pytest.raises(ValueError, match="unknown mode"):
+            small_fleet(mode="chaotic")
+        fleet = small_fleet()
+        with pytest.raises(ValueError, match="multiple of"):
+            fleet.run(30)  # not a multiple of interval_steps
+        with pytest.raises(ValueError, match="chunk boundary"):
+            fleet.run(64, measure_from=10)
+
+
+# --------------------------------------------------------------------- #
+# budget conservation + division exactness
+# --------------------------------------------------------------------- #
+class TestCoordinator:
+    def test_budget_conserved_across_ticks(self):
+        fleet = small_fleet(budget=120)
+        fleet.run(64)
+        check_fleet_conservation(fleet.coordinator)
+        assert fleet.coordinator.ticks == 7
+        for entry in fleet.coordinator.timeline:
+            assert sum(entry["budgets"]) == 120
+
+    def test_division_exact_under_extreme_shares(self):
+        fleet = small_fleet(budget=120)
+        coord = fleet.coordinator
+        for shares in ([0.999, 0.001], [0.001, 0.999], [0.5, 0.5]):
+            coord.shares = np.asarray(shares, np.float64)
+            budgets = coord.divide()
+            assert int(budgets.sum()) == 120
+            assert (budgets >= coord.config.min_budget).all()
+            assert (budgets <= coord._physical).all()
+
+    def test_global_budget_validation(self):
+        hosts = [FleetHostSpec(pools=(pool_spec(),))]
+        with pytest.raises(ValueError, match="outside"):
+            FleetSimulator(hosts, global_fast_budget=97)  # > physical
+        with pytest.raises(ValueError, match="outside"):
+            FleetSimulator(hosts, global_fast_budget=4)  # < min_budget
+        with pytest.raises(ValueError, match="min_budget"):
+            FleetCoordinatorConfig(min_budget=2)
+
+    def test_pushdown_reaches_watermarks_and_quotas(self):
+        fleet = small_fleet(budget=120, mode="greedy")
+        sp = fleet.pools[0]
+        sp.apply_budget(60)
+        pool = sp.pool
+        assert pool.fast_budget == 60
+        assert (pool.wm_min, pool.wm_alloc, pool.wm_demote) == \
+            pool.config.frames_for_budget(96, 60)
+        assert sp.control.fast_frames == 60
+        # full budget restores the unbudgeted watermarks exactly
+        sp.apply_budget(96)
+        assert (pool.wm_min, pool.wm_alloc, pool.wm_demote) == \
+            pool.config.frames(96)
+
+
+# --------------------------------------------------------------------- #
+# TierSan fleet law: corruption injection
+# --------------------------------------------------------------------- #
+class TestFleetSan:
+    def test_clean_fleet_passes(self):
+        fleet = small_fleet()
+        fleet.run(32)
+        check_fleet_conservation(fleet.coordinator)
+
+    def test_detects_budget_leak(self):
+        fleet = small_fleet()
+        fleet.pools[0].budget += 4  # mint frames outside the coordinator
+        with pytest.raises(TierSanError, match="fleet-conservation"):
+            check_fleet_conservation(fleet.coordinator)
+
+    def test_detects_silent_watermark_bypass(self):
+        fleet = small_fleet(budget=120)
+        sp = fleet.pools[0]
+        # a budget that never reached the watermarks (apply bypassed)
+        sp.budget = 50
+        fleet.pools[1].budget = 70  # keep the sum conserved
+        with pytest.raises(TierSanError, match="fleet-pushdown"):
+            check_fleet_conservation(fleet.coordinator)
+
+    def test_detects_stale_control_capacity(self):
+        fleet = small_fleet(budget=120)
+        fleet.coordinator.push(fleet.coordinator.divide())
+        sp = fleet.pools[0]
+        sp.control.fast_frames = sp.budget + 5  # quota/watermark drift
+        with pytest.raises(TierSanError, match="set_fast_budget"):
+            check_fleet_conservation(fleet.coordinator)
+
+
+# --------------------------------------------------------------------- #
+# deterministic per-shard seeding
+# --------------------------------------------------------------------- #
+class TestDeterminism:
+    def test_shard_seeds_are_stable(self):
+        fleet = small_fleet()
+        assert fleet.shard_seed(0, 0) == 7
+        assert fleet.shard_seed(1, 0) == 1007
+        assert fleet.shard_seed(3, 1) == 3008
+
+    def test_greedy_and_coordinated_replay_identical_arrivals(self):
+        """Mode must change budgets only — never the workload."""
+        fleets = [small_fleet(mode=m) for m in ("greedy", "coordinated")]
+        for h in range(2):
+            traces = [
+                make_trace(WORKLOAD, seed=f.shard_seed(h, 0), total_pages=500)
+                for f in fleets
+            ]
+            for _ in range(6):
+                a, b = next(traces[0]), next(traces[1])
+                assert a.allocs == b.allocs
+                assert a.accesses == b.accesses
+                assert a.frees == b.frees
+
+    def test_same_seed_same_fleet_result(self):
+        runs = [small_fleet(mode="coordinated").run(32) for _ in range(2)]
+        assert runs[0].vmstat == runs[1].vmstat
+        assert runs[0].budgets == runs[1].budgets
+        assert runs[0].summary() == runs[1].summary()
+
+
+# --------------------------------------------------------------------- #
+# telemetry windows
+# --------------------------------------------------------------------- #
+class TestTelemetry:
+    def test_windows_diff_not_accumulate(self):
+        fleet = small_fleet(mode="greedy")
+        sp = fleet.pools[0]
+        sp.sim.run(16)
+        first = sp.telemetry()
+        sp.sim.run(16)
+        second = sp.telemetry()
+        assert first.accesses > 0 and second.accesses > 0
+        # a window is one period, not the cumulative total
+        assert second.accesses < first.accesses + second.accesses
+        assert first.measured >= 1.0
+        assert set(first.per_class) == set(CLASSES)
+
+    def test_ledger_free_shard_reports_on_target(self):
+        from repro.core.engine import VectorPagePool
+
+        sp = ShardPool(host=0, name="bare", pool=VectorPagePool(64, 64))
+        t = sp.telemetry()
+        assert (t.accesses, t.measured, t.pressure) == (0, 1.0, 1.0)
+
+
+# --------------------------------------------------------------------- #
+# the CPU multi-host mesh smoke path
+# --------------------------------------------------------------------- #
+class TestMesh:
+    def test_mesh_reduction_matches_numpy(self):
+        n = host_device_count()
+        if n < 2:
+            pytest.skip("XLA host platform has a single device")
+        rows = np.arange(12, dtype=np.float64).reshape(min(n, 4), -1) + 0.5
+        got = mesh_reduce_telemetry(rows)
+        assert got is not None
+        np.testing.assert_allclose(got, rows.sum(axis=0))
+
+    def test_mesh_backed_coordinator_smoke(self):
+        if host_device_count() < 2:
+            pytest.skip("XLA host platform has a single device")
+        fleet = small_fleet(
+            budget=120,
+            coordinator=FleetCoordinatorConfig(use_mesh=True),
+        )
+        res = fleet.run(32)
+        check_fleet_conservation(fleet.coordinator)
+        for entry in res.coordinator["timeline"]:
+            assert np.isfinite(entry["fleet_pressure"])
+
+    def test_oversubscribed_mesh_falls_back(self):
+        rows = np.ones((host_device_count() + 1, 2))
+        assert mesh_reduce_telemetry(rows) is None
+
+
+# --------------------------------------------------------------------- #
+# serving pools as fleet shards
+# --------------------------------------------------------------------- #
+class TestServingShards:
+    def test_expert_tier_joins_a_fleet(self):
+        from repro.qos import QosArbiter
+        from repro.serving.expert_tier import (
+            ExpertTierConfig,
+            ExpertTierManager,
+        )
+
+        L, E = 2, 8
+        rng = np.random.default_rng(0)
+        weights = {"wi": rng.standard_normal((L, E, 4, 8)).astype(np.float32)}
+        mgr = ExpertTierManager(
+            ExpertTierConfig(n_layers=L, n_experts=E, fast_capacity=12,
+                             tpp=TppConfig(demote_budget=4, promote_budget=4)),
+            weights,
+            control=QosArbiter(2, 12),
+            tenant_of_expert=lambda l, e: l,
+        )
+        shard = mgr.as_shard_pool(host=0)
+        assert shard.key == "h0/experts"
+        assert shard.physical_fast == 12
+        assert shard.slow_cost == mgr.cfg.slow_cost
+        coord = FleetCoordinator(
+            [shard], global_budget=8,
+            config=FleetCoordinatorConfig(min_budget=4),
+        )
+        coord.push(coord.initial_budgets())
+        assert mgr.pool.fast_budget == 8
+        assert mgr.pool.control.fast_frames == 8
+        check_fleet_conservation(coord)
+        # traffic still flows under the shrunken budget
+        for step in range(16):
+            hits = [(l, int(np.minimum(rng.zipf(1.6), E)) - 1)
+                    for l in range(L)]
+            for (l, e) in hits:
+                mgr.lookup(l, e)
+            mgr.step(hits)
+            if step % 4 == 3:
+                mgr.pool.end_interval()
+        check_fleet_conservation(coord)
+
+    def test_kv_engine_exposes_shard_adapter(self):
+        jax = pytest.importorskip("jax")
+        from repro.configs import get_smoke_config
+        from repro.models.model import init_params
+        from repro.serving import EngineConfig, ServingEngine
+
+        cfg = get_smoke_config("tinyllama-1.1b")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            page_size=4, num_fast=32, num_slow=32, topk_pages=None,
+            qos=QosConfig(),
+        ))
+        shard = eng.as_shard_pool(host=3)
+        assert shard.key == "h3/kv"
+        assert shard.control is eng.control
+        coord = FleetCoordinator([shard], global_budget=16)
+        coord.push(coord.initial_budgets())
+        assert eng.kv.pool.fast_budget == 16
+        check_fleet_conservation(coord)
+        rid = eng.add_request(list(range(8)), max_new=2)
+        for _ in range(2):
+            eng.step()
+        assert rid in eng.requests
+        check_fleet_conservation(coord)

@@ -618,3 +618,95 @@ def test_serving_plane_parity_under_qos(tiny_model):
         vm = eng.kv.pool.vmstat
         assert vm.pgpromote_fail_qos >= 0  # counter exists on the path
     assert toks["reference"] == toks["batched"]
+
+
+# --------------------------------------------------------------------- #
+# fleet budget push-down (mid-run set_fast_budget)
+# --------------------------------------------------------------------- #
+def test_set_fast_budget_redivides_quotas():
+    arb = QosArbiter(2, 64, config=QosConfig(mode="static", shares=(0.5, 0.5)))
+    assert list(arb.quota) == [32.0, 32.0]
+    arb.set_fast_budget(32)
+    assert arb.fast_frames == 32
+    assert list(arb.quota) == [16.0, 16.0]
+    assert (arb.tokens <= arb._burst).all()
+    with pytest.raises(ValueError, match="fast budget"):
+        arb.set_fast_budget(0)
+
+
+def test_controller_budget_change_keeps_converged_shares():
+    ctl = SlowdownController(2, 64)
+    ctl.shares = np.asarray([0.8, 0.2])
+    ctl.set_fast_budget(32)
+    np.testing.assert_allclose(ctl.shares, [0.8, 0.2])
+    assert ctl.fast_frames == 32
+    floor = ctl.ctrl.share_floor * 32
+    np.testing.assert_allclose(
+        ctl.quota, np.maximum(np.asarray([0.8, 0.2]) * 32, floor))
+
+
+@pytest.mark.parametrize("pool_cls", (PagePool, VectorPagePool))
+def test_pool_budget_pushdown_moves_watermarks(pool_cls):
+    pool, arb = _pool_with_arbiter(pool_cls, QosConfig(), frames=64)
+    pool.set_fast_budget(32)
+    assert pool.fast_budget == 32
+    assert (pool.wm_min, pool.wm_alloc, pool.wm_demote) == \
+        pool.config.frames_for_budget(64, 32)
+    assert arb.fast_frames == 32  # one call updates pool + control
+    pool.set_fast_budget(64)  # full budget == the unbudgeted watermarks
+    assert (pool.wm_min, pool.wm_alloc, pool.wm_demote) == \
+        pool.config.frames(64)
+    with pytest.raises(ValueError, match="outside"):
+        pool.set_fast_budget(65)
+    with pytest.raises(ValueError, match="outside"):
+        pool.set_fast_budget(3)
+
+
+def test_midrun_budget_change_engine_parity():
+    """A coordinator push between chunks must keep the engines
+    bit-identical — budgets change future placement, never history."""
+
+    def run(engine):
+        sim = TieredSimulator(
+            "web+cache1", "tpp", 300, 1200, seed=7,
+            trace=make_trace("web+cache1", seed=7, total_pages=800),
+            engine=engine, qos=QOS3,
+        )
+        out = [sim.run(20)]
+        sim.pool.set_fast_budget(180)
+        out.append(sim.run(20))
+        sim.pool.set_fast_budget(260)
+        out.append(sim.run(20))
+        return sim, out
+
+    ref_sim, ref = run("reference")
+    vec_sim, vec = run("vectorized")
+    assert ref_sim.pool.vmstat.as_dict() == vec_sim.pool.vmstat.as_dict()
+    for r, v in zip(ref, vec):
+        assert r.local_fraction == v.local_fraction
+        assert r.qos == v.qos
+    assert ref_sim.control.fast_frames == 260
+
+
+def test_midrun_budget_shrink_enforced_and_invariants_hold():
+    """Reclaim walks the fast tier down to a shrunken budget, and the
+    full TierSan audit + ledger stay clean across the re-division."""
+    from repro.analysis import TierSan
+
+    sim = TieredSimulator(
+        "web+cache1+data_warehouse", "tpp", 300, 1200, seed=7,
+        trace=make_trace("web+cache1+data_warehouse", seed=7,
+                         total_pages=800),
+        engine="vectorized", qos=QOS3,
+    )
+    sim.run(20)
+    assert 300 - sim.pool.free_frames(Tier.FAST) > 200  # tier was full
+    sim.pool.set_fast_budget(180)
+    sim.run(40)
+    used = 300 - sim.pool.free_frames(Tier.FAST)
+    assert used <= 180  # effective fast tier shrank to the budget
+    TierSan("full").check(sim.pool, full=True)
+    sim.control.check_consistency(sim.pool)
+    # quotas re-divided over the budget, not the physical tier
+    assert sim.control.fast_frames == 180
+    assert float(np.sum(sim.control.quota)) <= 180 * (1 + 3 * 0.05) + 1e-9

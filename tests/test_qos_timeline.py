@@ -141,3 +141,22 @@ def test_serving_stats_carry_timeline():
     assert qos["timeline"]
     assert set(qos["timeline"][0]) == ENTRY_KEYS
     assert "steered_total" in qos and "shed_total" in qos
+
+
+class TestConfigurableBound:
+    def test_timeline_bounded_via_config(self):
+        arb = QosArbiter(2, 100, config=QosConfig(timeline_max=3))
+        assert arb.timeline_max == 3  # config wins over the class default
+        for _ in range(8):
+            arb.note_interval()
+        assert len(arb.timeline) == 3
+        assert arb.timeline[0]["interval"] == 5
+        assert arb.timeline[-1]["interval"] == 7
+
+    def test_default_bound_unchanged(self):
+        arb = QosArbiter(2, 100)
+        assert arb.timeline_max == QosArbiter.TIMELINE_MAX == 512
+
+    def test_bound_validation(self):
+        with pytest.raises(ValueError, match="timeline_max"):
+            QosConfig(timeline_max=0)
