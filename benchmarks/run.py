@@ -39,6 +39,7 @@ MODULES = [
     ("qos_controller", "benchmarks.qos_bench", False, "run_controller"),
     ("fleet", "benchmarks.fleet_bench", False, "run"),
     ("serving", "benchmarks.serving_bench", True, "run"),
+    ("traffic", "benchmarks.traffic_bench", True, "run"),
     ("kernels", "benchmarks.kernel_bench", False, "run"),
     ("roofline", "benchmarks.roofline", True, "run"),
 ]

@@ -1,0 +1,143 @@
+"""Traffic benchmark — per-class SLO goodput under Poisson/bursty load.
+
+Drives the continuous-batching front end (:mod:`repro.traffic`) over a
+constrained fast tier with two arrival shapes at equal offered load —
+steady Poisson and bursty MMPP — and two relief policies:
+
+* ``shed_only`` — the engine's batch-class admission gate is the only
+  pressure valve; running batch lanes keep squatting fast frames while
+  new batch work is refused.
+* ``victims`` — the scheduler additionally consults the control plane
+  (``relief_action``/``order_pressure_victims``): sustained pressure
+  evicts the lowest-share × coldest running batch lane (its frames free
+  at once, the request restarts later) and pauses colder non-batch
+  lanes so TPP demotes their pages.
+
+Reported per class: goodput (SLO-meeting completions per simulated
+second) and p50/p99 TTFT/TPOT from the modeled latency clock.  The run
+asserts the tentpole's acceptance bar — victim relief beats shed-only
+on latency-critical goodput under both arrival shapes.  Results land in
+``BENCH_traffic.json``.
+
+  PYTHONPATH=src python -m benchmarks.traffic_bench
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import TppConfig
+from repro.models.model import init_params
+from repro.qos import QosConfig
+from repro.serving import EngineConfig, ServingEngine
+from repro.traffic import (
+    BurstyArrivals,
+    PoissonArrivals,
+    TrafficConfig,
+    TrafficScheduler,
+    generate_trace,
+)
+
+MODEL = "tinyllama-1.1b"
+CLASSES = ("latency_critical", "standard", "batch")
+SEED = 7
+N_REQUESTS = 56
+# equal offered load (requests/sim-second): Poisson at RATE, MMPP
+# alternating a 3*RATE burst state with an idle state of equal dwell
+RATE = 100.0
+RELIEF_MODES = {"shed_only": "shed", "victims": "control"}
+
+
+def _engine(cfg, params) -> ServingEngine:
+    """A serving engine with a *constrained* fast tier: four decode
+    lanes' working sets cannot all fit the 16 fast frames, so sustained
+    traffic holds the pool at the reclaim watermarks."""
+    return ServingEngine(cfg, params, EngineConfig(
+        page_size=4, num_fast=16, num_slow=256,
+        topk_pages=4, recent_pages=2, max_seqs=4,
+        data_plane="batched",
+        tpp=TppConfig(demote_budget=16, promote_budget=8),
+        qos=QosConfig(classes=CLASSES, evict_after=2),
+    ), seed=0)
+
+
+def _arrivals(kind: str):
+    if kind == "poisson":
+        return PoissonArrivals(RATE)
+    return BurstyArrivals(3.0 * RATE, idle_rate=RATE / 3.0,
+                          mean_burst=0.1, mean_idle=0.2)
+
+
+def _run(cfg, params, kind: str, relief: str, n_requests: int) -> Dict:
+    trace = generate_trace(_arrivals(kind), seed=SEED, vocab=cfg.vocab,
+                           max_requests=n_requests)
+    eng = _engine(cfg, params)
+    # short pauses + a ~10-step post-evict hold: long enough for the
+    # latency-critical lanes to regain fast residency, short enough
+    # that batch restarts don't stretch the run's tail
+    sched = TrafficScheduler(eng, trace, TrafficConfig(
+        relief=relief, pause_steps=4, evict_backoff_steps=10))
+    res = sched.run()
+    summary = res.summary()
+    summary["lc_goodput_rps"] = round(res.lc_goodput, 4)
+    return summary
+
+
+def run(quick: bool = False) -> List[str]:
+    n_requests = 24 if quick else N_REQUESTS
+    cfg = get_smoke_config(MODEL)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    out: List[str] = []
+    results: Dict[str, Dict] = {}
+    for kind in ("poisson", "bursty"):
+        results[kind] = {}
+        for label, relief in RELIEF_MODES.items():
+            s = _run(cfg, params, kind, relief, n_requests)
+            results[kind][label] = s
+            lc = s["per_class"].get("latency_critical", {})
+            out.append(
+                f"traffic/{kind}_{label},0.0,"
+                f"lc_goodput={s['lc_goodput_rps']:.2f},"
+                f"lc_ttft_p99={lc.get('ttft_p99_ms')},"
+                f"lc_tpot_p99={lc.get('tpot_p99_ms')},"
+                f"evictions={s['evictions']},sheds={s['sheds']}"
+            )
+        shed_lc = results[kind]["shed_only"]["lc_goodput_rps"]
+        vict_lc = results[kind]["victims"]["lc_goodput_rps"]
+        # the tentpole's acceptance bar: victim relief must beat
+        # shed-only admission on latency-critical goodput
+        assert vict_lc > shed_lc, (
+            f"{kind}: victim relief ({vict_lc} rps) does not beat "
+            f"shed-only ({shed_lc} rps) on latency-critical goodput"
+        )
+        gain = vict_lc / shed_lc if shed_lc > 0 else float("inf")
+        results[kind]["lc_goodput_gain"] = (
+            round(gain, 3) if gain != float("inf") else "inf")
+        out.append(f"traffic/{kind}_lc_gain,0.0,x{gain:.2f}")
+
+    mmpp = _arrivals("bursty")
+    payload = {
+        "model": MODEL,
+        "requests": n_requests,
+        "seed": SEED,
+        "offered_rate_rps": RATE,
+        "bursty_mean_rate_rps": round(mmpp.mean_rate, 2),
+        "results": results,
+    }
+    with open("BENCH_traffic.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    for line in run(quick=ap.parse_args().quick):
+        print(line)

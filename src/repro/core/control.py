@@ -61,11 +61,29 @@ steering decisions sequence exactly like the reference engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.types import PageType, Tier
+
+
+@dataclasses.dataclass(frozen=True)
+class VictimCandidate:
+    """One pausable/evictable unit of work, as a front end presents it.
+
+    The serving front end (``repro.traffic``) builds one candidate per
+    occupied decode lane: ``key`` is the front end's handle (slot id),
+    ``tenant``/``qos_class`` identify whose work it is, and ``pids`` are
+    the live pages the unit would stop touching (pause) or free outright
+    (evict).  The control plane only *orders* candidates — acting on
+    them stays with the front end.
+    """
+
+    key: int
+    tenant: int
+    pids: Tuple[int, ...] = ()
+    qos_class: str = "standard"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +178,31 @@ class TieringControl:
         """True when a batch-class admission should shed (fast tier under
         reclaim pressure while the control is protecting other tenants)."""
         return False
+
+    def relief_action(self, pool) -> str:
+        """What a serving front end should do about fast-tier pressure.
+
+        ``"none"`` — no pressure, keep admitting; ``"shed"`` — refuse
+        new batch-class work but leave running lanes alone; ``"evict"``
+        — shedding alone has not relieved the fast tier, so the front
+        end should pause/evict running victims (pick them with
+        :meth:`order_pressure_victims`).  The neutral control never
+        escalates: admission shedding is the only lever it knows.
+        """
+        return "none"
+
+    def order_pressure_victims(
+        self, candidates: Sequence["VictimCandidate"], pool
+    ) -> List["VictimCandidate"]:
+        """Order pause/evict victims, best-victim-first.
+
+        Called by a front end when :meth:`relief_action` says
+        ``"evict"``.  The neutral control recommends nobody (an empty
+        list) — only an arbitrating control has the share/residency
+        ledger the Equilibria-style victim ordering (lowest share ×
+        coldest residency) needs.
+        """
+        return []
 
     # -------------------------- observability ------------------------- #
     def qos_summary(self) -> Optional[dict]:

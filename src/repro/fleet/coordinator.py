@@ -53,6 +53,10 @@ class FleetCoordinatorConfig:
       devices are unavailable.  The budgets themselves are always
       computed identically — the mesh path is the multi-host smoke
       surface, numpy-verified in tests.
+    * ``miss_decay`` — per-missed-tick decay of the shares toward the
+      greedy capacity-proportional static split (see
+      :meth:`FleetCoordinator.missed_tick`).  1.0 snaps back to greedy
+      in one miss; small values forget the learned skew slowly.
     """
 
     gain: float = 0.5
@@ -60,6 +64,7 @@ class FleetCoordinatorConfig:
     min_budget: int = 8
     measure_alpha: float = 0.5
     use_mesh: bool = False
+    miss_decay: float = 0.25
 
     def __post_init__(self) -> None:
         if self.gain <= 0:
@@ -71,6 +76,10 @@ class FleetCoordinatorConfig:
             )
         if not 0 < self.share_floor < 1:
             raise ValueError("share_floor must be in (0, 1)")
+        if not 0 < self.miss_decay <= 1:
+            raise ValueError(
+                f"miss_decay must be in (0, 1] (got {self.miss_decay})"
+            )
 
 
 class FleetCoordinator:
@@ -113,6 +122,7 @@ class FleetCoordinator:
         self.shares = self._physical / self._physical.sum()
         self.pressure_ewma = np.ones(n, np.float64)
         self.ticks = 0
+        self.missed_ticks = 0
         self.timeline: List[Dict] = []
 
     # ---------------------------------------------------------------- #
@@ -190,6 +200,35 @@ class FleetCoordinator:
         })
         return telem
 
+    def missed_tick(self) -> np.ndarray:
+        """Fault tolerance: a gather round failed (telemetry unreachable).
+
+        A coordinator that keeps pushing stale learned skew while blind
+        can starve a shard whose load spiked after the last good window.
+        Instead each missed round decays the shares — and the pressure
+        EWMA, which carries no fresh information either — toward the
+        greedy capacity-proportional static split a coordination-free
+        fleet would provision (``miss_decay`` per miss); repeated misses
+        converge on that safe division, and the first successful
+        :meth:`tick` resumes control from wherever the decay left off.
+        Budgets still re-divide and push (conservation holds throughout).
+        """
+        d = self.config.miss_decay
+        greedy = self._physical / self._physical.sum()
+        self.shares = (1.0 - d) * self.shares + d * greedy
+        self.pressure_ewma = (1.0 - d) * self.pressure_ewma + d
+        budgets = self.divide()
+        self.push(budgets)
+        self.ticks += 1
+        self.missed_ticks += 1
+        self.timeline.append({
+            "tick": self.ticks,
+            "missed": True,
+            "shares": [round(float(s), 4) for s in self.shares],
+            "budgets": [int(b) for b in budgets],
+        })
+        return budgets
+
     def _fleet_pressure(self, telem: List[ShardTelemetry]) -> float:
         """Access-weighted fleet-wide pressure for the tick record.
 
@@ -236,6 +275,7 @@ class FleetCoordinator:
         return {
             "global_budget": self.global_budget,
             "ticks": self.ticks,
+            "missed_ticks": self.missed_ticks,
             "shards": [
                 {
                     "key": p.key,

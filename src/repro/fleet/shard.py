@@ -78,10 +78,14 @@ class ShardPool:
 
     ``control`` defaults to ``pool.control``; ``sim`` optionally carries
     the :class:`~repro.core.simulator.TieredSimulator` driving the pool
-    (the fleet simulator steps shards through it).  ``slo`` maps class
-    names to slowdown targets (default :data:`~repro.qos.controller
-    .DEFAULT_SLO`); ``slow_cost`` must match the modeled slow-tier cost
-    of whatever drives the pool so measured slowdowns are comparable.
+    (the fleet simulator steps shards through it), and ``traffic`` a
+    :class:`~repro.traffic.scheduler.TrafficScheduler` — a shard whose
+    pool serves live request traffic instead of a synthetic access
+    stream (:meth:`HostShard.step` advances whichever driver is
+    attached).  ``slo`` maps class names to slowdown targets (default
+    :data:`~repro.qos.controller.DEFAULT_SLO`); ``slow_cost`` must match
+    the modeled slow-tier cost of whatever drives the pool so measured
+    slowdowns are comparable.
     """
 
     def __init__(
@@ -91,6 +95,7 @@ class ShardPool:
         pool,
         control=None,
         sim=None,
+        traffic=None,
         slo: Optional[Mapping[str, float]] = None,
         slow_cost: float = 2.0,
     ) -> None:
@@ -99,6 +104,7 @@ class ShardPool:
         self.pool = pool
         self.control = control if control is not None else pool.control
         self.sim = sim
+        self.traffic = traffic
         self.slo = dict(DEFAULT_SLO)
         if slo:
             self.slo.update(slo)
@@ -240,9 +246,17 @@ class HostShard:
         return [p.telemetry() for p in self.pools]
 
     def step(self, steps: int) -> Dict[str, object]:
-        """Advance every simulator-driven pool ``steps`` steps."""
+        """Advance every driven pool ``steps`` steps.
+
+        Simulator shards run their synthetic access stream; traffic
+        shards run up to ``steps`` generate steps of their scheduler
+        (the run is incremental — the next call continues the same
+        trace where this one stopped).
+        """
         out: Dict[str, object] = {}
         for p in self.pools:
             if p.sim is not None:
                 out[p.key] = p.sim.run(steps)
+            elif p.traffic is not None:
+                out[p.key] = p.traffic.run(max_steps=steps).summary()
         return out

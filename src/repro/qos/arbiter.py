@@ -39,7 +39,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.control import AllocRequest
+from repro.core.control import AllocRequest, VictimCandidate
 from repro.core.types import Tier
 from repro.qos.accounting import TenantAccounting
 from repro.qos.quota import (
@@ -83,6 +83,10 @@ class QosArbiter(TenantAccounting):
         self.shed_total = 0
         self.timeline: List[Dict] = []
         self._tl_prev: Optional[Dict[str, int]] = None
+        # serving relief escalation: consecutive pressured relief_action
+        # queries (resets the moment pressure clears)
+        self._pressure_streak = 0
+        self.evictions_recommended = 0
 
     # ---------------------------------------------------------------- #
     # shares / growth
@@ -282,6 +286,79 @@ class QosArbiter(TenantAccounting):
         return shed
 
     # ---------------------------------------------------------------- #
+    # serving signal: shed-vs-evict relief + victim ordering
+    # ---------------------------------------------------------------- #
+    def _fast_pressure(self, pool) -> bool:
+        """Same trigger as :meth:`shed_batch_request`: the fast tier sits
+        at (or under) the reclaim watermark while some tenant is over
+        quota — new allocations would thrash protected residency."""
+        if pool.free_frames(Tier.FAST) > pool.wm_demote:
+            return False
+        return bool(
+            (self.fast_pages > self.quota + self.config.quota_slack).any()
+        )
+
+    def relief_action(self, pool) -> str:
+        """Escalating relief: pressure sheds first, persistence evicts.
+
+        Admission shedding only stops *new* batch work — lanes already
+        decoding keep their residency.  When ``evict_after`` consecutive
+        queries stay pressured, shedding has demonstrably not drained
+        the fast tier and the front end is told to pick running victims
+        (:meth:`order_pressure_victims`).  The streak resets the moment
+        pressure clears (a relieved tier de-escalates immediately) and
+        after every eviction recommendation — evicting a victim takes a
+        few steps to actually free frames, so back-to-back "evict"
+        verdicts would thrash running lanes faster than the relief they
+        buy can land.
+        """
+        if not self._fast_pressure(pool):
+            self._pressure_streak = 0
+            return "none"
+        self._pressure_streak += 1
+        if self._pressure_streak >= self.config.evict_after:
+            self._pressure_streak = 0
+            self.evictions_recommended += 1
+            return "evict"
+        return "shed"
+
+    def order_pressure_victims(
+        self, candidates: Sequence[VictimCandidate], pool
+    ) -> List[VictimCandidate]:
+        """Order victims by **lowest share × coldest residency** first.
+
+        A candidate's score is its tenant's fast-tier share multiplied
+        by how *warm* its pages run — the fraction of its live pages
+        that are fast-resident plus the fraction on the active list.  A
+        low-priority tenant whose lane mostly reads the slow tier
+        anyway scores lowest: pausing or evicting it frees (or cools)
+        the most contested frames while costing the least protected
+        work.  Ties break on the front end's key so the order is
+        deterministic across engines.
+        """
+        if not candidates:
+            return []
+        shares = self.quota / max(1, self.fast_frames)
+
+        def score(c: VictimCandidate) -> float:
+            share = (
+                float(shares[c.tenant])
+                if 0 <= c.tenant < self.n_tenants else 1.0
+            )
+            live = [p for p in c.pids if pool.has_page(p)]
+            if live:
+                fast = sum(
+                    1 for p in live if pool.tier_of(p) == Tier.FAST
+                ) / len(live)
+                active = sum(1 for p in live if pool.is_active(p)) / len(live)
+                warmth = 0.5 * (fast + active)
+            else:
+                warmth = 0.0
+            return share * (0.05 + warmth)
+
+        return sorted(candidates, key=lambda c: (score(c), c.key))
+
+    # ---------------------------------------------------------------- #
     # interval close: violations, dynamic re-division, token refill
     # ---------------------------------------------------------------- #
     def note_interval(self) -> None:
@@ -367,5 +444,6 @@ class QosArbiter(TenantAccounting):
             "violations_by_tenant": [int(x) for x in self.violations_by_tenant],
             "steered_total": int(self.steered_total),
             "shed_total": int(self.shed_total),
+            "evictions_recommended": int(self.evictions_recommended),
             "timeline": [dict(e) for e in self.timeline],
         }

@@ -70,6 +70,10 @@ class QosConfig:
       timeline, so long fleet runs need a bound sized to their
       coordination horizon; ``None`` keeps the arbiter's default
       (``QosArbiter.TIMELINE_MAX``).
+    * ``evict_after`` — consecutive pressured ``relief_action`` queries
+      before the arbiter escalates a serving front end from admission
+      shedding to pause/evict victim selection (shedding needs a few
+      steps to drain before evicting running work is justified).
     """
 
     mode: str = "dynamic"
@@ -85,11 +89,16 @@ class QosConfig:
     promote_tokens_per_interval: float = 64.0
     token_burst: float = 2.0
     timeline_max: Optional[int] = None
+    evict_after: int = 4
 
     def __post_init__(self) -> None:
         if self.mode not in ("static", "dynamic"):
             raise ValueError(
                 f"unknown quota mode {self.mode!r}; choose static|dynamic"
+            )
+        if self.evict_after < 1:
+            raise ValueError(
+                f"evict_after must be >= 1 (got {self.evict_after})"
             )
         if self.timeline_max is not None and self.timeline_max < 1:
             raise ValueError(

@@ -105,12 +105,18 @@ class Request:
 class _Seq:
     """Engine-side sequence state."""
 
-    def __init__(self, rid: int, tenant: int = 0) -> None:
+    def __init__(self, rid: int, tenant: int = 0,
+                 qos_class: str = "standard") -> None:
         self.rid = rid
         self.tenant = tenant  # QoS tenant id (frame tagging)
+        self.qos_class = qos_class
         self.pages: List[int] = []  # pids, in order
         self.cur_len = 0
         self.paused = False
+        # prefilled but not yet inserted into a decode lane (the
+        # continuous-batching front end's prefill/insert split) — a
+        # detached sequence holds its KV but is skipped by step()
+        self.detached = False
 
 
 def _flat_layers(params: Any, cfg: ModelConfig) -> List[Any]:
@@ -189,6 +195,10 @@ class ServingEngine:
         # pid -> (L, Hkv, D) np
         self._summaries: Dict[int, np.ndarray] = {}
         self.steps = 0
+        # per-step per-sequence tier hit split {rid: (fast, slow)} — the
+        # traffic front end's latency model reads a lane's own residency
+        # from here (refreshed by every step())
+        self.last_hits: Dict[int, Tuple[int, int]] = {}
         # ------------------------------------------------------------ #
         # batched plane: per-slot device summary state + jitted fns
         # ------------------------------------------------------------ #
@@ -241,8 +251,8 @@ class ServingEngine:
                 "sequence before admitting another",
                 reason="max_seqs",
             )
+        cls = qos_class or self.ecfg.qos_class
         if self.control is not None:
-            cls = qos_class or self.ecfg.qos_class
             if (self.ecfg.admission_control and cls == "batch"
                     and self.control.shed_batch_request(self.kv.pool)):
                 raise AdmissionError(
@@ -258,11 +268,47 @@ class ServingEngine:
         self._next_rid += 1
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
         self.requests[rid] = req
-        self.seqs[rid] = _Seq(rid, tenant=tenant)
+        self.seqs[rid] = _Seq(rid, tenant=tenant, qos_class=cls)
         if self.ecfg.data_plane == "batched":
             self._slot_of[rid] = self._free_slots.pop()
         self._prefill(req)
         return rid
+
+    # -------------------- continuous-batching lifecycle ------------- #
+    def prefill_request(
+        self,
+        prompt: Sequence[int],
+        max_new: int = 16,
+        qos_class: Optional[str] = None,
+        tenant: int = 0,
+    ) -> int:
+        """Admit + prefill a request *detached* from the decode batch.
+
+        The JetStream-style ``prefill`` half of continuous batching: the
+        prompt's KV lands in the tiered cache (generating the same
+        allocation pressure a running sequence would) but ``step()``
+        skips the sequence until :meth:`insert_request` attaches it to a
+        decode lane.  Admission (``max_seqs`` cap, batch-class QoS
+        shedding) is identical to :meth:`add_request`.
+        """
+        rid = self.add_request(
+            prompt, max_new=max_new, qos_class=qos_class, tenant=tenant
+        )
+        self.seqs[rid].detached = True
+        return rid
+
+    def insert_request(self, rid: int) -> None:
+        """Attach a prefilled (detached) sequence to the decode batch."""
+        seq = self.seqs[rid]
+        if not seq.detached:
+            raise ValueError(
+                f"request {rid} is already inserted into the decode batch"
+            )
+        seq.detached = False
+
+    def free_lanes(self) -> int:
+        """Decode lanes still unclaimed (``max_seqs`` minus live seqs)."""
+        return self.ecfg.max_seqs - len(self.seqs)
 
     def pause(self, rid: int) -> None:
         """Session pause: pages become FILE (cold prefix bulk, §5.4)."""
@@ -441,7 +487,9 @@ class ServingEngine:
     def step(self) -> Dict[int, int]:
         """One decode step for all active sequences → {rid: token}."""
         active = [s for s in self.seqs.values()
-                  if not s.paused and not self.requests[s.rid].done]
+                  if not s.paused and not s.detached
+                  and not self.requests[s.rid].done]
+        self.last_hits = {}
         if self.ecfg.data_plane == "batched":
             out, slow_hits, fast_hits = self._decode_batched(active)
         else:
@@ -452,6 +500,7 @@ class ServingEngine:
                 out[seq.rid] = tok
                 slow_hits += s_hits
                 fast_hits += f_hits
+                self.last_hits[seq.rid] = (len(f_hits), len(s_hits))
         for rid, tok in out.items():
             req = self.requests[rid]
             req.out.append(tok)
@@ -628,9 +677,16 @@ class ServingEngine:
                             else np.zeros(n_older, np.float32))
             sel = self._select_pages(seq, older_scores)
             sels.append(sel)
+            nf = ns = 0
             for pid in sel:
                 tier = self.kv.pool.touch(pid)
-                (s_hits if tier == Tier.SLOW else f_hits).append(pid)
+                if tier == Tier.SLOW:
+                    s_hits.append(pid)
+                    ns += 1
+                else:
+                    f_hits.append(pid)
+                    nf += 1
+            self.last_hits[seq.rid] = (nf, ns)
 
         # allocate every sequence's write target (page-boundary allocs
         # land here; touch order above matches the reference plane —
@@ -757,7 +813,8 @@ class ServingEngine:
         return jnp.einsum("bhd,bmlhd->bm", qm.astype(jnp.float32), means)
 
     # ---------------------------------------------------------------- #
-    def as_shard_pool(self, host: int = 0, name: str = "kv", slo=None):
+    def as_shard_pool(self, host: int = 0, name: str = "kv", slo=None,
+                      traffic=None):
         """Register this engine's KV pool as a fleet shard.
 
         The returned :class:`~repro.fleet.shard.ShardPool` lets a
@@ -765,14 +822,17 @@ class ServingEngine:
         KV cache's fast tier alongside other pools on the same host —
         push-downs land through ``pool.set_fast_budget``, telemetry
         windows come from the engine's attached control ledger (a
-        control-free engine reports on-target).  Import is lazy so
-        serving stays usable without the fleet package.
+        control-free engine reports on-target).  ``traffic`` optionally
+        attaches a :class:`~repro.traffic.scheduler.TrafficScheduler`
+        over this engine so ``HostShard.step`` drives the shard from a
+        request trace.  Import is lazy so serving stays usable without
+        the fleet package.
         """
         from repro.fleet.shard import ShardPool
 
         return ShardPool(
             host=host, name=name, pool=self.kv.pool,
-            control=self.control, slo=slo,
+            control=self.control, slo=slo, traffic=traffic,
         )
 
     def stats(self) -> Dict[str, Any]:

@@ -308,3 +308,26 @@ class TieredKVCache:
 
     def occupancy(self) -> Dict[str, int]:
         return self.pool.occupancy()
+
+    # ---------------------------------------------------------------- #
+    # residency introspection (the traffic front end's latency model)
+    # ---------------------------------------------------------------- #
+    def tiers_of(self, pids: Sequence[int]) -> np.ndarray:
+        """Tier of each live page (``Tier`` values as an int array)."""
+        return np.fromiter(
+            (int(self.pool.tier_of(int(p))) for p in pids),
+            np.int64, count=len(pids),
+        )
+
+    def fast_fraction(self, pids: Sequence[int]) -> float:
+        """Fraction of the given pages resident in the fast tier.
+
+        The per-lane residency signal: a sequence whose pages mostly sit
+        slow decodes slower (the latency-accounting model charges it the
+        slow-tier cost) and makes a cheap pressure victim.  Empty page
+        lists read as fully fast (no penalty to charge).
+        """
+        if not len(pids):
+            return 1.0
+        fast = int((self.tiers_of(pids) == int(Tier.FAST)).sum())
+        return fast / len(pids)

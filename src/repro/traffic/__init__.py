@@ -1,0 +1,58 @@
+"""Continuous-batching serving front end over the tiered data plane.
+
+The subsystem splits into four layers, composed by the scheduler:
+
+* :mod:`repro.traffic.arrivals` — seed-deterministic request traces
+  (Poisson and bursty/MMPP arrival processes, per-tenant QoS mixes);
+* :mod:`repro.traffic.slots` — the JetStream-style
+  prefill/insert/generate slot engine over
+  :class:`~repro.serving.engine.ServingEngine`;
+* :mod:`repro.traffic.latency` — the modeled latency clock (queueing +
+  prefill + residency-dependent decode) and per-class SLO metrics;
+* :mod:`repro.traffic.scheduler` — the admission queue, lane refill,
+  and control-plane pause/evict relief driving it all.
+"""
+
+from repro.traffic.arrivals import (
+    ArrivalProcess,
+    BurstyArrivals,
+    ClassMix,
+    DEFAULT_MIX,
+    PoissonArrivals,
+    RequestSpec,
+    generate_trace,
+)
+from repro.traffic.latency import (
+    ClassMetrics,
+    DEFAULT_TRAFFIC_SLO,
+    LatencyModel,
+    RequestRecord,
+    make_class_metrics,
+)
+from repro.traffic.scheduler import (
+    TrafficConfig,
+    TrafficResult,
+    TrafficScheduler,
+)
+from repro.traffic.slots import SlotEngine, SlotError, SlotInfo
+
+__all__ = [
+    "ArrivalProcess",
+    "BurstyArrivals",
+    "ClassMetrics",
+    "ClassMix",
+    "DEFAULT_MIX",
+    "DEFAULT_TRAFFIC_SLO",
+    "LatencyModel",
+    "PoissonArrivals",
+    "RequestRecord",
+    "RequestSpec",
+    "SlotEngine",
+    "SlotError",
+    "SlotInfo",
+    "TrafficConfig",
+    "TrafficResult",
+    "TrafficScheduler",
+    "generate_trace",
+    "make_class_metrics",
+]

@@ -117,6 +117,41 @@ class TestCoordinator:
         with pytest.raises(ValueError, match="min_budget"):
             FleetCoordinatorConfig(min_budget=2)
 
+    def test_missed_tick_decays_toward_greedy_split(self):
+        """Fault tolerance: blind rounds forget learned skew, conserve."""
+        fleet = small_fleet(budget=120)
+        coord = fleet.coordinator
+        fleet.run(32)  # learn some skew from real telemetry first
+        coord.shares = np.asarray([0.9, 0.1], np.float64)  # extreme skew
+        coord.pressure_ewma = np.asarray([3.0, 0.2], np.float64)
+        greedy = coord._physical / coord._physical.sum()
+        ticks0 = coord.ticks
+        gap0 = float(np.abs(coord.shares - greedy).sum())
+        for i in range(12):
+            budgets = coord.missed_tick()
+            assert int(budgets.sum()) == 120  # conservation holds blind
+            check_fleet_conservation(coord)
+            gap = float(np.abs(coord.shares - greedy).sum())
+            assert gap < gap0
+            gap0 = gap
+        # repeated misses converge on the capacity-proportional split
+        np.testing.assert_allclose(coord.shares, greedy, atol=0.05)
+        np.testing.assert_allclose(coord.pressure_ewma, 1.0, atol=0.1)
+        assert coord.missed_ticks == 12
+        assert coord.ticks == ticks0 + 12
+        missed = [e for e in coord.timeline if e.get("missed")]
+        assert len(missed) == 12 and missed[-1]["tick"] == coord.ticks
+        # decay=1.0 snaps straight back to greedy in one miss
+        cfg = FleetCoordinatorConfig(miss_decay=1.0)
+        fleet2 = small_fleet(budget=120, coordinator=cfg)
+        coord2 = fleet2.coordinator
+        coord2.shares = np.asarray([0.95, 0.05], np.float64)
+        coord2.missed_tick()
+        np.testing.assert_allclose(
+            coord2.shares, coord2._physical / coord2._physical.sum())
+        with pytest.raises(ValueError, match="miss_decay"):
+            FleetCoordinatorConfig(miss_decay=0.0)
+
     def test_pushdown_reaches_watermarks_and_quotas(self):
         fleet = small_fleet(budget=120, mode="greedy")
         sp = fleet.pools[0]
